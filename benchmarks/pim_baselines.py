@@ -1,0 +1,102 @@
+"""Fig 13 — vs prior PIM ANNS systems (UpANNS / PIMANN = IVF-PQ family).
+
+Implements the IVF-PQ baseline the prior PIM accelerators run: coarse IVF
++ product quantization (M sub-spaces x 256 centroids) with ADC scan — no
+graph. The paper's claim: IVF-PQ hits a recall CEILING (~61-67%%) that more
+compute cannot cross, while PIMCQG's graph+rerank path keeps climbing.
+We sweep nprobe for IVF-PQ and (nprobe, EF) for PIMCQG and report the
+frontier: the ceiling is the reproduced phenomenon.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine, ivf
+from .common import build_engine, fmt_row, make_workload, recall_at10, timed_qps
+
+
+class IVFPQ:
+    def __init__(self, key, x: np.ndarray, n_clusters: int, m: int = 8,
+                 iters: int = 8):
+        n, d = x.shape
+        assert d % m == 0
+        self.m, self.ds = m, d // m
+        km = ivf.kmeans(key, jnp.asarray(x), n_clusters, iters=iters)
+        self.centroids = np.asarray(km.centroids)
+        self.assign = np.asarray(km.assignment)
+        resid = x - self.centroids[self.assign]
+        self.codebooks = np.zeros((m, 256, self.ds), np.float32)
+        self.codes = np.zeros((n, m), np.uint8)
+        for j in range(m):
+            sub = resid[:, j * self.ds:(j + 1) * self.ds]
+            kmj = ivf.kmeans(jax.random.fold_in(key, j), jnp.asarray(sub),
+                             256, iters=iters, sample=min(n, 4000))
+            self.codebooks[j] = np.asarray(kmj.centroids)
+            self.codes[:, j] = np.asarray(ivf.assign(
+                jnp.asarray(sub), jnp.asarray(self.codebooks[j])))
+        # bucket members per cluster
+        self.buckets = [np.nonzero(self.assign == c)[0]
+                        for c in range(n_clusters)]
+
+    def search(self, q: np.ndarray, nprobe: int, k: int = 10) -> np.ndarray:
+        d2c = ((q[:, None] - self.centroids[None]) ** 2).sum(-1)
+        probes = np.argsort(d2c, 1)[:, :nprobe]
+        out = np.zeros((len(q), k), np.int64)
+        for i, qi in enumerate(q):
+            ids = np.concatenate([self.buckets[c] for c in probes[i]])
+            # ADC: per-subspace lookup tables against the query residual
+            best_c = probes[i][0]
+            dists = np.zeros(len(ids), np.float32)
+            for c in probes[i]:
+                mask = self.assign[ids] == c
+                if not mask.any():
+                    continue
+                resid_q = qi - self.centroids[c]
+                lut = ((resid_q.reshape(self.m, 1, self.ds)
+                        - self.codebooks) ** 2).sum(-1)      # (m, 256)
+                sub_ids = ids[mask]
+                dists[mask] = lut[np.arange(self.m)[:, None],
+                                  self.codes[sub_ids].T].sum(0)
+            out[i] = ids[np.argsort(dists)[:k]] if len(ids) >= k else \
+                np.pad(ids[np.argsort(dists)], (0, k - len(ids)),
+                       constant_values=-1)
+        return out
+
+
+def run(verbose: bool = True) -> list[str]:
+    w = make_workload("SIFT")
+    # m=16 (8 dims/subspace): PQ at its most favorable on this corpus.
+    # The isotropic synthetic residuals are PQ-hostile (no correlation
+    # structure to exploit) and within-cluster distances concentrate, so
+    # the ceiling lands LOWER than the paper's ~61% on real SIFT1B — the
+    # phenomenon (a recall ceiling more compute cannot cross, while the
+    # graph+exact-rerank path keeps climbing) is what reproduces.
+    pq = IVFPQ(jax.random.PRNGKey(0), w.x, w.icfg.n_clusters, m=16)
+    rows = []
+    best_pq = 0.0
+    for nprobe in (2, 4, 8, 16, 24):
+        import time
+        t0 = time.perf_counter()
+        ids = pq.search(w.q, nprobe)
+        dt = time.perf_counter() - t0
+        rec = recall_at10(ids, w.gt)
+        best_pq = max(best_pq, rec)
+        rows.append(fmt_row(f"fig13_ivfpq_np{nprobe}",
+                            dt / len(w.q) * 1e6,
+                            f"recall={rec:.3f} qps={len(w.q) / dt:.0f}"))
+    # PIMCQG crosses the PQ ceiling
+    scfg = engine.SearchConfig(nprobe=8, ef=80, k=10)
+    eng = build_engine(w, scfg)
+    (res, _), qps, dt = timed_qps(lambda q: eng.search(q), w.q)
+    rec = recall_at10(np.asarray(res.ids), w.gt)
+    rows.append(fmt_row("fig13_pimcqg", dt / len(w.q) * 1e6,
+                        f"recall={rec:.3f} qps={qps:.0f} "
+                        f"pq_ceiling={best_pq:.3f} "
+                        f"crosses_ceiling={rec > best_pq + 0.02}"))
+    if verbose:
+        for r in rows:
+            print(r)
+    return rows

@@ -1,0 +1,40 @@
+"""Fig 10/11 — QPS & energy efficiency vs recall@10.
+
+Sweeps (nprobe, EF) exactly like the paper ("each point is obtained by
+varying the search-cluster count and EF"). Wall-clock is this container's
+CPU, so ABSOLUTE QPS is not paper-comparable; the deliverable is the
+recall-throughput FRONTIER SHAPE and the mulfree-vs-exact ordering.
+Energy efficiency divides by the paper's Table I platform powers (the
+PIMCQG point uses the PIM system power), reproducing Fig 11's relative
+structure.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import engine
+from .common import POWER, build_engine, fmt_row, make_workload, recall_at10, timed_qps
+
+
+def sweep(dataset: str = "SIFT", verbose: bool = True) -> list[str]:
+    w = make_workload(dataset)
+    rows = []
+    for nprobe, ef in [(2, 10), (2, 20), (4, 20), (4, 40), (6, 40),
+                       (6, 80), (8, 80), (8, 120)]:
+        scfg = engine.SearchConfig(nprobe=nprobe, ef=ef, k=10)
+        eng = build_engine(w, scfg)
+        (res, _), qps, dt = timed_qps(lambda q: eng.search(q), w.q)
+        rec = recall_at10(np.asarray(res.ids), w.gt)
+        rows.append(fmt_row(
+            f"fig10_{dataset}_np{nprobe}_ef{ef}", dt / len(w.q) * 1e6,
+            f"recall={rec:.3f} qps={qps:.0f} "
+            f"qps_per_w={qps / POWER['pim']:.2f}"))
+    if verbose:
+        for r in rows:
+            print(r)
+    return rows
+
+
+def run(verbose: bool = True) -> list[str]:
+    return sweep("SIFT", verbose)

@@ -1,0 +1,60 @@
+"""Fig 1 analogue + §Roofline table — reads results/dryrun/*.json.
+
+Fig 1 (paper): graph-based ANNS kernels sit in the memory-bound region.
+Here: arithmetic intensity of the PIMCQG search kernels (from kernel byte/
+flop math) + the full (arch x shape) roofline table from the dry-run
+artifacts, with the three terms, bottleneck, and MFU.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+from .common import fmt_row
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results/dryrun"
+
+
+def anns_kernel_intensity() -> list[str]:
+    """Arithmetic intensity of the PU-side kernels (Fig 1 reproduction)."""
+    rows = []
+    for name, (flops_per_node, bytes_per_node) in {
+        # binary_ip: D adds (LUT dot via MXU 2D flops) per node; reads
+        # D/8 code bytes + f_add
+        "binary_ip_D128": (2 * 128, 128 // 8 + 4),
+        "exact_rerank_D128": (2 * 128, 128 * 4),
+        "beam_gather_R32": (2 * 128 * 32, 32 * (128 // 8 + 4 + 4)),
+    }.items():
+        ai = flops_per_node / bytes_per_node
+        ridge = PEAK_FLOPS_BF16 / HBM_BW
+        rows.append(fmt_row(f"fig1_{name}", 0.0,
+                            f"intensity={ai:.1f}flop/B ridge={ridge:.0f} "
+                            f"bound={'memory' if ai < ridge else 'compute'}"))
+    return rows
+
+
+def roofline_rows(mesh: str = "pod16x16") -> list[str]:
+    rows = []
+    if not RESULTS.exists():
+        return [fmt_row("roofline_missing", 0.0, "run dryrun first")]
+    for p in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        rows.append(fmt_row(
+            f"roof_{r['arch']}_{r['shape']}", rf["step_time_s"] * 1e6,
+            f"tc={rf['t_compute_s']:.2e} tm={rf['t_memory_s']:.2e} "
+            f"tx={rf['t_collective_s']:.2e} bneck={rf['bottleneck']} "
+            f"useful={rf['useful_flops_frac']:.2f} mfu={rf['mfu']:.4f}"))
+    return rows
+
+
+def run(verbose: bool = True) -> list[str]:
+    rows = anns_kernel_intensity() + roofline_rows()
+    if verbose:
+        for r in rows:
+            print(r)
+    return rows

@@ -1,0 +1,67 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig16,tab2]
+
+Prints ``name,us_per_call,derived`` CSV lines per artifact (plus section
+headers). Modules:
+
+    index_size      Table II   index footprint
+    qps_recall      Fig 10/11  QPS + QPS/W vs recall frontier
+    overfetch       Fig 15     EF sweep vs SymphonyQG-mode baseline
+    scheduling      Fig 16     policy comparison (calibrated simulator)
+    breakdown       Fig 14     five-stage pipeline breakdown
+    mulfree_bench   Fig 17/9   shift-add kernel time + recall delta
+    pim_baselines   Fig 13     IVF-PQ recall ceiling vs PIMCQG
+    multinode       Fig 18     400GbE scale-out model
+    pim_arch        Fig 19     PIM-HBM / AiM projection
+    roofline_table  Fig 1 + §Roofline table from dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    ("tab2", "index_size"),
+    ("fig10", "qps_recall"),
+    ("fig15", "overfetch"),
+    ("fig16", "scheduling"),
+    ("fig14", "breakdown"),
+    ("fig17", "mulfree_bench"),
+    ("fig13", "pim_baselines"),
+    ("fig18", "multinode"),
+    ("fig19", "pim_arch"),
+    ("roofline", "roofline_table"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+    failures = []
+    for tag, mod_name in MODULES:
+        if only and tag not in only:
+            continue
+        print(f"# === {tag} ({mod_name}) ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            mod.run(verbose=True)
+        except Exception as e:                              # noqa: BLE001
+            failures.append((tag, repr(e)))
+            print(f"{tag},ERROR,{e!r}", flush=True)
+        print(f"# {tag} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Fig 16 + Fig 7/8 — scheduling-policy comparison on the event simulator,
+calibrated with stage costs measured from the real engine on this host.
+
+Policies: per-query dispatch, batch-synchronous, fixed pipeline(1)
+(= PIMCQG_1), and PIMCQG's dynamic mini-batching. Paper: dynamic wins
+70-155x over per-query, ~1.5x over batch-sync, 1.7-2.4x over pipeline(1).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import engine
+from repro.core.pipeline import (EventSimulator, LinkModel, StageCosts,
+                                 UPMEM_LINK, tune_minibatch)
+from .common import build_engine, fmt_row, make_workload, timed_qps
+
+
+def calibrated_costs(w, eng) -> StageCosts:
+    """Measure per-batch cost at two sizes -> affine (intercept, slope).
+
+    The measured per-BATCH intercept (dispatch/setup — the analogue of the
+    paper's Fig 6 fixed transfer cost) lands on the per-batch terms of
+    prep/search/rerank; the slope is split by the paper's Fig 14 stage
+    proportions (search ≤50%, post-processing dominant — our on-device
+    rerank is proportionally cheaper than the paper's host-side pass, so
+    the stage WEIGHTS follow the paper while magnitudes are measured)."""
+    (_, _), _, t8 = timed_qps(lambda q: eng.search(q), w.q[:8], iters=2)
+    (_, _), _, t32 = timed_qps(lambda q: eng.search(q), w.q[:32], iters=2)
+    slope = max((t32 - t8) / 24.0, 1e-7)
+    icpt = max(t8 - 8 * slope, 1e-6)
+    return StageCosts(
+        t_pre=lambda n: 0.25 * icpt + 0.10 * slope * n,
+        t_proc=lambda n: 0.40 * icpt + 0.40 * slope * n,
+        t_post=lambda n: 0.35 * icpt + 0.50 * slope * n,
+        link=UPMEM_LINK, query_bytes=w.icfg.dim * 4 + 64,
+        result_bytes=40 * 8)
+
+
+def upmem_regime_costs() -> StageCosts:
+    """Stage costs in the PAPER's regime: weak DPUs (~0.4 ms/query search),
+    host prep/rerank fixed costs, and the Fig 6 link (≈60 µs setup for
+    small transfers, congestion past the 8 KB knee). The policy ORDERING
+    of Fig 16 is a property of this cost structure — a Xeon running the
+    whole engine at ~2 ms/query with a PCIe-class link (calibrated_costs)
+    has no bus to saturate, which is the paper's very motivation."""
+    link = LinkModel(setup_s=60e-6, bw_bytes_s=600e6, knee_bytes=8192,
+                     congestion=0.3)
+    return StageCosts(
+        t_pre=lambda n: 50e-6 + 10e-6 * n,
+        t_proc=lambda n: 200e-6 + 400e-6 * n,
+        t_post=lambda n: 80e-6 + 60e-6 * n,
+        link=link, query_bytes=576, result_bytes=320)
+
+
+def run(verbose: bool = True) -> list[str]:
+    w = make_workload("SIFT", n_queries=64)
+    scfg = engine.SearchConfig(nprobe=4, ef=40, k=10)
+    eng = build_engine(w, scfg)
+    costs = upmem_regime_costs()
+    costs_measured = calibrated_costs(w, eng)
+
+    n_pus, n_q = 64, 4000
+    rng = np.random.default_rng(0)
+    pus = rng.integers(0, n_pus, n_q)
+    # heavy-load arrival process (the regime Fig 16 measures)
+    arrivals = np.cumsum(rng.exponential(costs.t_proc(1) / n_pus / 4, n_q))
+    sim = EventSimulator(n_pus=n_pus, costs=costs, rerank_workers=8)
+
+    # Eq (1) optimum, clamped to what the per-PU arrival rate can fill
+    nstar_raw, per_q = tune_minibatch(costs)
+    nstar = max(2, min(nstar_raw, 16, n_q // n_pus // 4))
+    r_pq = sim.per_query(n_q, pus)
+    r_bs = sim.batch_sync(n_q, 512, pus)
+    r_p1 = sim.pipeline(n_q, 1, pus)
+    r_dyn = sim.dynamic(arrivals, pus, threshold=nstar,
+                        wait_limit_s=3 * costs.t_proc(nstar))
+
+    rows = [
+        fmt_row("fig16_per_query", 1e6 / max(r_pq.qps, 1e-9),
+                f"qps={r_pq.qps:.0f}"),
+        fmt_row("fig16_batch_sync", 1e6 / max(r_bs.qps, 1e-9),
+                f"qps={r_bs.qps:.0f} ({r_bs.qps / r_pq.qps:.1f}x pq)"),
+        fmt_row("fig16_pipeline1", 1e6 / max(r_p1.qps, 1e-9),
+                f"qps={r_p1.qps:.0f}"),
+        fmt_row("fig16_dynamic", 1e6 / max(r_dyn.qps, 1e-9),
+                f"qps={r_dyn.qps:.0f} N*={nstar} (eq1={nstar_raw}) "
+                f"vs_pq={r_dyn.qps / r_pq.qps:.1f}x "
+                f"vs_bs={r_dyn.qps / r_bs.qps:.2f}x "
+                f"vs_p1={r_dyn.qps / r_p1.qps:.2f}x"),
+    ]
+    # secondary: the same policies under costs measured from THIS host's
+    # engine (no weak-PU/slow-bus structure -> batching gains compress;
+    # recorded to keep the calibration honest)
+    simm = EventSimulator(n_pus=n_pus, costs=costs_measured,
+                          rerank_workers=8)
+    m_pq = simm.per_query(n_q, pus)
+    nm, _ = tune_minibatch(costs_measured)
+    m_dyn = simm.dynamic(arrivals, pus, threshold=max(2, min(nm, 16)),
+                         wait_limit_s=3 * costs_measured.t_proc(16))
+    rows.append(fmt_row(
+        "fig16_measured_regime", 1e6 / max(m_dyn.qps, 1e-9),
+        f"dynamic={m_dyn.qps:.0f}qps per_query={m_pq.qps:.0f}qps "
+        f"ratio={m_dyn.qps / m_pq.qps:.2f}x (host regime, see docstring)"))
+    if verbose:
+        for r in rows:
+            print(r)
+    return rows

@@ -1,0 +1,38 @@
+"""RAG-style serving: batched LM decode + PIMCQG retrieval per request.
+
+    PYTHONPATH=src python examples/rag_serve.py [--arch h2o-danube-1.8b]
+
+The paper's production position for billion-scale ANNS: a serving stack
+emits query embeddings, the PIMCQG engine (cluster filter -> in-"PU" beam
+search -> host rerank) returns neighbors, all through the asynchronous
+mini-batched pipeline (O2). This driver runs the reduced-config LM,
+retrieves per generated batch, and reports decode + retrieval throughput.
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.launch.serve import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    t0 = time.time()
+    toks, retrieved = run(args.arch, args.requests, args.prompt_len,
+                          args.gen, rag=True)
+    print(f"generated tokens shape: {toks.shape}")
+    assert retrieved is not None and (retrieved >= 0).any()
+    print(f"retrieval wired through the async pipeline: "
+          f"{retrieved.shape[1]} neighbors/request")
+    print(f"total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

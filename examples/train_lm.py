@@ -1,0 +1,36 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch phi3-mini-3.8b]
+        [--steps 300]
+
+Uses the '100m' preset (same family as the chosen arch, ~100M params),
+the synthetic Zipf+copy-motif pipeline, AdamW with cosine decay, manifest
+checkpoints with resume, on whatever devices exist (CPU here; the same
+launcher lowers under the production mesh). Loss should fall from ~10.4
+(ln V) toward the corpus entropy.
+"""
+
+import argparse
+
+from repro.launch.train import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-mini-3.8b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    losses = run(arch=args.arch, preset="100m", steps=args.steps,
+                 batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir,
+                 ckpt_every=100, resume=True, mesh_kind="test",
+                 log_every=20)
+    first, last = losses[0], sum(losses[-10:]) / min(10, len(losses))
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

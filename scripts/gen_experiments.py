@@ -1,0 +1,133 @@
+"""Assemble EXPERIMENTS.md from dry-run artifacts + the §Perf log.
+
+    PYTHONPATH=src python scripts/gen_experiments.py
+
+Reads results/dryrun/*.json for §Dry-run and §Roofline; splices in
+docs/perf_log.md (the hand-written hypothesis->change->measure log) and
+docs/experiments_preamble.md.
+"""
+
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+RESULTS = ROOT / "results/dryrun"
+
+
+def load():
+    recs = [json.loads(p.read_text()) for p in sorted(RESULTS.glob("*.json"))]
+    return [r for r in recs]
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.2f} GB" if b >= 1e8 else f"{b / 1e6:.1f} MB"
+
+
+def dryrun_section(recs):
+    out = ["## §Dry-run", ""]
+    ok = [r for r in recs if r["status"] == "ok"]
+    skip = [r for r in recs if r["status"] == "skip"]
+    err = [r for r in recs if r["status"] == "error"]
+    cells = {(r["arch"], r["shape"]) for r in recs if r["arch"] != "pimcqg-engine"}
+    out.append(
+        f"`lower().compile()` succeeds for **{len(ok)}** cells "
+        f"({len([r for r in ok if r['mesh'] == 'pod16x16'])} single-pod 16×16, "
+        f"{len([r for r in ok if r['mesh'] == 'pod2x16x16'])} multi-pod 2×16×16) "
+        f"across {len(cells)} (arch × shape) pairs + the PIMCQG engine itself; "
+        f"{len(skip)} cells are brief-directed skips (long_500k on the 7 "
+        f"pure-full-attention archs), {len(err)} errors.")
+    out.append("")
+    out.append("Per-cell artifacts (bytes/device, FLOPs, collective schedule) "
+               "live in `results/dryrun/*.json`. Memory proof + collective mix "
+               "for the single-pod mesh:")
+    out.append("")
+    out.append("| arch | shape | params | FSDP | args/dev | temp/dev | "
+               "collectives (top op) | compile s |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "pod16x16":
+            continue
+        mem = r.get("memory", {})
+        coll = r.get("hlo", {}).get("coll_by_op", {})
+        top = max(coll, key=coll.get) if coll else "-"
+        npar = r.get("n_params")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{f'{npar / 1e9:.1f}B' if npar else '—'} | "
+            f"{'Y' if r.get('fsdp') else ''} | "
+            f"{fmt_bytes(mem.get('argument_size_in_bytes', 0))} | "
+            f"{fmt_bytes(mem.get('temp_size_in_bytes', 0))} | "
+            f"{top} {fmt_bytes(coll.get(top, 0)) if coll else ''} | "
+            f"{r.get('compile_s', r.get('wall_s', 0))} |")
+    out.append("")
+    out.append("Skipped cells (`long_500k`, brief-directed):")
+    for r in sorted(skip, key=lambda r: r["arch"]):
+        if r["mesh"] == "pod16x16":
+            out.append(f"- **{r['arch']}**: {r['reason'][:90]}...")
+    out.append("")
+    return out
+
+
+def roofline_section(recs):
+    out = ["## §Roofline", "",
+           "Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, "
+           "~50 GB/s/link ICI (brief constants). Terms are system totals "
+           "from the trip-count-weighted HLO walk (launch/hlo_stats.py; "
+           "XLA's own cost_analysis counts scanned layer stacks once) "
+           "divided by chips × peak. MODEL_FLOPS = 6·N_active·D (train), "
+           "2·N_active·D (serve).", "",
+           "### Single-pod (16×16 = 256 chips) — all 33 runnable cells + "
+           "the PIMCQG engine", "",
+           "| arch | shape | t_compute | t_memory | t_coll | bottleneck | "
+           "useful/HLO | MFU | what would move the dominant term |"]
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    advice = {
+        "memory": "fuse attention tiles into a Pallas flash kernel "
+                  "(VMEM-resident score tiles); bf16 accumulators",
+        "collective": "overlap grad reduce-scatter with backward; "
+                      "hierarchical (pod-local first) collectives",
+        "compute": "at roofline — raise arithmetic intensity or accept",
+    }
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok" or r["mesh"] != "pod16x16":
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['t_compute_s']:.2e} s | "
+            f"{rf['t_memory_s']:.2e} s | {rf['t_collective_s']:.2e} s | "
+            f"**{rf['bottleneck']}** | {rf['useful_flops_frac']:.2f} | "
+            f"{rf['mfu']:.4f} | {advice[rf['bottleneck']]} |")
+    out.append("")
+    out.append("### Multi-pod (2×16×16 = 512 chips) — pod-axis shards prove out")
+    out.append("")
+    out.append("| arch | shape | t_compute | t_memory | t_coll | bottleneck | MFU |")
+    out.append("|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok" or r["mesh"] != "pod2x16x16":
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['t_compute_s']:.2e} | "
+            f"{rf['t_memory_s']:.2e} | {rf['t_collective_s']:.2e} | "
+            f"{rf['bottleneck']} | {rf['mfu']:.4f} |")
+    out.append("")
+    return out
+
+
+def main():
+    recs = load()
+    parts = []
+    pre = ROOT / "docs/experiments_preamble.md"
+    if pre.exists():
+        parts.append(pre.read_text())
+    parts += ["\n".join(dryrun_section(recs)),
+              "\n".join(roofline_section(recs))]
+    perf = ROOT / "docs/perf_log.md"
+    if perf.exists():
+        parts.append(perf.read_text())
+    (ROOT / "EXPERIMENTS.md").write_text("\n\n".join(parts))
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

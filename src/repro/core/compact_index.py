@@ -1,0 +1,188 @@
+"""O1 — PIM-friendly compact index (paper §IV-A) + SymphonyQG baseline layout.
+
+Layouts (paper Fig 5):
+
+  SymphonyQG (per node):            PIMCQG compact (per node):
+    raw vector      D * 4 B            (raw vector -> HOST store)
+    neighbor ids    R * 4 B            neighbor ids  R * 4 B
+    neighbor codes  R * D/8 B          canonical code    D/8 B
+    neighbor factors R * 8 B           f_add (int32)       4 B
+                                       (alpha, rho: per *cluster*)
+
+The IVF cluster is the deployment unit: every cluster is a self-contained
+search structure (codes + f_add + local-id adjacency + entry point) that maps
+onto one PU / mesh shard. Clusters are padded to a common node budget so the
+whole index is a stack of dense arrays — jit/shard_map friendly, and the
+padding is exactly the PU-local memory budget headroom the placement step
+(core/placement.py) manages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import graph as graph_mod
+from . import ivf, mulfree, rabitq
+
+__all__ = [
+    "CompactIndex", "HostStore", "IndexConfig", "build_compact_index",
+    "symphonyqg_bytes_per_node", "compact_bytes_per_node", "footprint_report",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    dim: int
+    n_clusters: int = 64
+    degree: int = 32            # graph out-degree R
+    knn_k: int = 64             # candidate pool for pruning
+    prune_alpha: float = 1.2
+    kmeans_iters: int = 12
+    kmeans_sample: int = 0      # 0 = train on all points
+    pad_quantile: float = 1.0   # cluster node budget = quantile of sizes (1.0 = max)
+
+    @property
+    def dim_padded(self) -> int:
+        return self.dim + ((-self.dim) % 8)
+
+
+class CompactIndex(NamedTuple):
+    """PIM-resident arrays, stacked over clusters (C = n_clusters, M = budget)."""
+
+    codes: jax.Array        # (C, M, Dpad//8) uint8 — canonical RabitQ codes
+    f_add: jax.Array        # (C, M) int32 — folded additive factor (O3)
+    neighbors: jax.Array    # (C, M, R) int32 — local ids, -1 pad
+    entry: jax.Array        # (C,) int32 — per-cluster entry node (medoid)
+    n_valid: jax.Array      # (C,) int32
+    node_ids: jax.Array     # (C, M) int32 — local -> global id map, -1 pad
+    centroids: jax.Array    # (C, D) f32
+    alpha: jax.Array        # (C,) f32   — cluster cos_theta constant (O3)
+    rho: jax.Array          # (C,) f32   — cluster residual-norm constant (O3)
+    shift1: jax.Array       # (C,) int32 — shift-add exponents for 1/alpha
+    shift2: jax.Array       # (C,) int32
+    # SymphonyQG-mode per-node factor tables (NOT counted in the compact
+    # footprint; kept for the exact-mode baseline & ablations, Fig 9/17)
+    residual_norm: jax.Array  # (C, M) f32
+    cos_theta: jax.Array      # (C, M) f32
+    rotation: jax.Array       # (D, D) f32 — shared random rotation
+    dim: int
+
+    @property
+    def n_clusters(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def budget(self) -> int:
+        return self.codes.shape[1]
+
+
+class HostStore(NamedTuple):
+    """Host-side (off-PIM) data: raw vectors for exact reranking (O1.2)."""
+    vectors: jax.Array      # (N, D) f32 — global-id addressed
+    centroids: jax.Array    # (C, D) f32 — for cluster filtering
+
+
+def _gather_cluster(x: np.ndarray, assignment: np.ndarray, cid: int, budget: int):
+    ids = np.nonzero(assignment == cid)[0][:budget]
+    n = len(ids)
+    pad = budget - n
+    vecs = np.zeros((budget, x.shape[1]), np.float32)
+    vecs[:n] = x[ids]
+    gids = np.full((budget,), -1, np.int32)
+    gids[:n] = ids
+    valid = np.zeros((budget,), bool)
+    valid[:n] = True
+    return vecs, gids, valid
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _encode_cluster(vecs, valid, centroid, rotation, cfg: IndexConfig):
+    """Per-cluster: canonical codes + graph + O3 constants. vmap-free body so
+    clusters of one shard can be lax.map'ed."""
+    codes = rabitq.encode(vecs, centroid, rotation, dim=cfg.dim)
+    g = graph_mod.build_cluster_graph(
+        vecs, valid, r=cfg.degree, knn_k=cfg.knn_k, prune_alpha=cfg.prune_alpha)
+    consts = mulfree.calibrate_alpha(codes.cos_theta, codes.residual_norm, valid)
+    f_add = mulfree.fold_node_factor(codes.residual_norm)
+    f_add = jnp.where(valid, f_add, jnp.iinfo(jnp.int32).max)  # pad rows rank last
+    return dict(
+        codes=codes.packed, f_add=f_add, neighbors=g.neighbors, entry=g.entry,
+        n_valid=g.n_valid, residual_norm=codes.residual_norm,
+        cos_theta=jnp.where(valid, codes.cos_theta, 1.0),
+        alpha=consts.alpha, rho=consts.rho,
+        shift1=consts.shifts.s1, shift2=consts.shifts.s2,
+    )
+
+
+def build_compact_index(key: jax.Array, x: np.ndarray, cfg: IndexConfig,
+                        *, verbose: bool = False) -> tuple[CompactIndex, HostStore]:
+    """Offline index construction (paper treats this as preprocessing).
+
+    x: (N, D) float32 dataset (numpy — construction is host-side).
+    """
+    assert x.shape[1] == cfg.dim
+    x = np.asarray(x, np.float32)
+    kkm, krot = jax.random.split(key)
+    km = ivf.kmeans(kkm, jnp.asarray(x), cfg.n_clusters,
+                    iters=cfg.kmeans_iters, sample=cfg.kmeans_sample)
+    assignment = np.asarray(km.assignment)
+    sizes = np.bincount(assignment, minlength=cfg.n_clusters)
+    budget = int(np.quantile(sizes, cfg.pad_quantile)) if cfg.pad_quantile < 1.0 \
+        else int(sizes.max())
+    budget = max(budget, 2)
+    if verbose:
+        print(f"[index] {cfg.n_clusters} clusters, sizes min/med/max = "
+              f"{sizes.min()}/{int(np.median(sizes))}/{sizes.max()}, budget={budget}")
+
+    rotation = rabitq.random_rotation(krot, cfg.dim)
+    cents = np.asarray(km.centroids)
+
+    per_cluster = []
+    for cid in range(cfg.n_clusters):
+        vecs, gids, valid = _gather_cluster(x, assignment, cid, budget)
+        out = _encode_cluster(jnp.asarray(vecs), jnp.asarray(valid),
+                              jnp.asarray(cents[cid]), rotation, cfg)
+        out = {k: np.asarray(v) for k, v in out.items()}
+        out["node_ids"] = gids
+        per_cluster.append(out)
+
+    stack = {k: jnp.asarray(np.stack([c[k] for c in per_cluster]))
+             for k in per_cluster[0]}
+    idx = CompactIndex(
+        codes=stack["codes"], f_add=stack["f_add"], neighbors=stack["neighbors"],
+        entry=stack["entry"], n_valid=stack["n_valid"], node_ids=stack["node_ids"],
+        centroids=jnp.asarray(cents), alpha=stack["alpha"], rho=stack["rho"],
+        shift1=stack["shift1"], shift2=stack["shift2"],
+        residual_norm=stack["residual_norm"], cos_theta=stack["cos_theta"],
+        rotation=rotation, dim=cfg.dim,
+    )
+    host = HostStore(vectors=jnp.asarray(x), centroids=jnp.asarray(cents))
+    return idx, host
+
+
+# ---------------------------------------------------------------------------
+# Footprint accounting (paper Table II) — exact per-node byte math
+# ---------------------------------------------------------------------------
+
+def symphonyqg_bytes_per_node(dim: int, degree: int) -> int:
+    """Fig 5(a): raw vector + per-EDGE codes/factors + neighbor ids."""
+    code_bytes = (dim + 7) // 8
+    return 4 * dim + degree * (code_bytes + 8 + 4)
+
+
+def compact_bytes_per_node(dim: int, degree: int) -> int:
+    """Fig 5(b): canonical code + f_add + neighbor ids (raw vectors on host)."""
+    code_bytes = (dim + 7) // 8
+    return code_bytes + 4 + degree * 4
+
+
+def footprint_report(dim: int, degree: int, n: int) -> dict:
+    s = symphonyqg_bytes_per_node(dim, degree) * n
+    c = compact_bytes_per_node(dim, degree) * n
+    return {"symphonyqg_bytes": s, "pimcqg_bytes": c, "reduction": s / c}

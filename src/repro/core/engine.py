@@ -1,0 +1,277 @@
+"""PIMCQG engine — end-to-end query path (paper Fig 4).
+
+    host: cluster filter -> per-lane LUT prep -> dispatch
+    PU  : beam search over locally-resident compact clusters (shard_map)
+    host: gather candidates -> exact rerank -> top-k
+
+TPU mapping (DESIGN.md §2): the ``model`` mesh axis is the PU array — each
+shard owns ``clusters_per_shard`` self-contained compact clusters, placed by
+core/placement.py. A *lane* is one (query, probed cluster) unit of in-PU
+work; lanes are routed to the shard owning their cluster. Raw vectors (the
+"host store") never live on the model axis — they are sharded over the
+data axis for the rerank stage.
+
+The whole path is one jit-able function with static shapes, so it lowers
+under the production mesh for the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import beam_search, compact_index, ivf, mulfree, placement as placement_mod
+from . import rabitq, rerank as rerank_mod
+
+__all__ = ["SearchConfig", "PlacedIndex", "PIMCQGEngine", "SearchStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    nprobe: int = 8
+    ef: int = 40              # over-fetched candidate set size (EF > n_b)
+    k: int = 10
+    max_iters: int = 64       # beam-expansion cap per lane
+    mode: str = "mulfree"     # 'mulfree' (O3) | 'exact' (SymphonyQG baseline)
+    scan: str = "beam"        # 'beam' | 'gemv' (full-cluster scan, Fig 19)
+    lane_capacity_factor: float = 2.0  # per-shard lane buffer headroom
+
+
+class PlacedIndex(NamedTuple):
+    """CompactIndex reshaped to shard-major (S, C/S, ...) layout."""
+    centroids: jax.Array   # (S, Cl, D) f32
+    codes: jax.Array       # (S, Cl, M, W) u8
+    f_add: jax.Array       # (S, Cl, M) i32
+    neighbors: jax.Array   # (S, Cl, M, R) i32
+    entry: jax.Array       # (S, Cl) i32
+    n_valid: jax.Array     # (S, Cl) i32
+    node_ids: jax.Array    # (S, Cl, M) i32
+    residual_norm: jax.Array  # (S, Cl, M) f32
+    cos_theta: jax.Array      # (S, Cl, M) f32
+    alpha: jax.Array       # (S, Cl) f32
+    rho: jax.Array         # (S, Cl) f32
+    shift1: jax.Array      # (S, Cl) i32
+    shift2: jax.Array      # (S, Cl) i32
+
+
+class SearchStats(NamedTuple):
+    hops: jax.Array        # (S, L) i32 per-lane expansions (-1 pad lanes = 0)
+    dropped_lanes: jax.Array  # () i32 — lanes lost to buffer overflow
+
+
+def _place(idx: compact_index.CompactIndex, pl: placement_mod.Placement) -> PlacedIndex:
+    def rs(a):
+        a = np.asarray(a)[pl.order]
+        return jnp.asarray(a.reshape(pl.n_shards, pl.per_shard, *a.shape[1:]))
+    return PlacedIndex(
+        centroids=rs(idx.centroids),
+        codes=rs(idx.codes), f_add=rs(idx.f_add), neighbors=rs(idx.neighbors),
+        entry=rs(idx.entry), n_valid=rs(idx.n_valid), node_ids=rs(idx.node_ids),
+        residual_norm=rs(idx.residual_norm), cos_theta=rs(idx.cos_theta),
+        alpha=rs(idx.alpha), rho=rs(idx.rho),
+        shift1=rs(idx.shift1), shift2=rs(idx.shift2),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Lane routing (host dispatch): (Q, nprobe) probes -> per-shard lane tables
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_shards", "capacity"))
+def route_lanes(probe_cids: jax.Array, shard_of: jax.Array, local_slot: jax.Array,
+                *, n_shards: int, capacity: int):
+    """Build static-shape per-shard lane tables.
+
+    probe_cids (Q, P) global cluster ids -> for shard s: lane_q (S, L),
+    lane_cl (S, L) local cluster slots (-1 pad); plus the inverse map
+    (Q, P) -> flat slot into the (S*L,) result array for candidate gather.
+    """
+    q, p = probe_cids.shape
+    flat_cid = probe_cids.reshape(-1)                      # (QP,)
+    flat_q = jnp.repeat(jnp.arange(q, dtype=jnp.int32), p)
+    lane_shard = shard_of[flat_cid]                        # (QP,)
+    order = jnp.argsort(lane_shard, stable=True)
+    sh_sorted = lane_shard[order]
+    # position within shard = index - first index of that shard
+    first = jnp.searchsorted(sh_sorted, jnp.arange(n_shards), side="left")
+    pos = jnp.arange(q * p) - first[sh_sorted]
+    ok = pos < capacity
+    dropped = jnp.sum(~ok)
+
+    # overflowing lanes get an out-of-bounds destination -> dropped by scatter
+    dest = jnp.where(ok, sh_sorted * capacity + pos, n_shards * capacity)
+    lane_q = jnp.full((n_shards * capacity,), -1, jnp.int32)
+    lane_cl = jnp.full((n_shards * capacity,), -1, jnp.int32)
+    src_q = flat_q[order]
+    src_cl = local_slot[flat_cid[order]].astype(jnp.int32)
+    lane_q = lane_q.at[dest].set(src_q, mode="drop")
+    lane_cl = lane_cl.at[dest].set(src_cl, mode="drop")
+
+    # inverse: original flat probe -> its result slot (or -1 if dropped)
+    inv = jnp.full((q * p,), -1, jnp.int32)
+    inv = inv.at[order].set(jnp.where(ok, dest, -1))
+    return (lane_q.reshape(n_shards, capacity),
+            lane_cl.reshape(n_shards, capacity),
+            inv.reshape(q, p), dropped.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# In-shard search (the "PU program")
+# ---------------------------------------------------------------------------
+
+def _lane_luts(queries, lane_q, centroids_l, lane_cl, rotation, rho_l, dim, mode):
+    """Dispatch-stage LUT prep for every lane of one shard (vectorized)."""
+    safe_q = jnp.clip(lane_q, 0)
+    safe_c = jnp.clip(lane_cl, 0)
+    qv = queries[safe_q]                                  # (L, D)
+    cv = centroids_l[safe_c]                              # (L, D)
+    if mode == "mulfree":
+        def prep(qi, ci, rho):
+            consts = mulfree.ClusterConstants(
+                jnp.float32(0), rho, mulfree.AlphaShifts(
+                    jnp.int32(0), jnp.int32(0), jnp.float32(0)))
+            return mulfree.prepare_int_lut(qi, ci, rotation, consts, dim)
+        lut, sumq = jax.vmap(prep)(qv, cv, rho_l[safe_c])
+        zf = jnp.zeros((lane_q.shape[0], lut.shape[-1]), jnp.float32)
+        return lut, sumq, zf, jnp.zeros_like(sumq, jnp.float32), \
+            jnp.zeros_like(sumq, jnp.float32)
+    qlut = jax.vmap(lambda qi, ci: rabitq.prepare_query(qi, ci, rotation))(qv, cv)
+    pad = (-dim) % 8
+    g = jnp.pad(qlut.lut, ((0, 0), (0, pad))) if pad else qlut.lut
+    zi = jnp.zeros((lane_q.shape[0], g.shape[-1]), jnp.int32)
+    return zi, jnp.zeros((lane_q.shape[0],), jnp.int32), g, qlut.sum_lut, \
+        qlut.query_norm
+
+
+def _make_shard_search(cfg: SearchConfig, dim: int):
+    """Returns f(shard_index_arrays..., queries, lane_q, lane_cl, centroids_l,
+    rotation) -> (gids (L, EF), rank (L, EF), hops (L,)) for ONE shard."""
+
+    def shard_search(pi_codes, pi_f_add, pi_neighbors, pi_entry, pi_n_valid,
+                     pi_node_ids, pi_rnorm, pi_ctheta, pi_rho,
+                     pi_s1, pi_s2, centroids_l, rotation,
+                     queries, lane_q, lane_cl):
+        lut, sumq, glutf, sumqf, qnormf = _lane_luts(
+            queries, lane_q, centroids_l, lane_cl, rotation, pi_rho, dim,
+            cfg.mode)
+
+        def one_lane(cl, lut_i, sumq_i, gf_i, sumqf_i, qnormf_i):
+            c = jnp.clip(cl, 0)
+            if cfg.scan == "gemv":
+                res = beam_search.full_scan_lane(
+                    pi_codes[c], pi_f_add[c], pi_n_valid[c],
+                    pi_rnorm[c], pi_ctheta[c],
+                    lut_i, sumq_i, pi_s1[c], pi_s2[c],
+                    gf_i, sumqf_i, qnormf_i,
+                    ef=cfg.ef, dim=dim, mode=cfg.mode)
+            else:
+                # pass the WHOLE shard-local stacks + the cluster index:
+                # per-lane slicing would materialize (lanes, M, ...) under
+                # vmap (§Perf P2)
+                res = beam_search.beam_search_lane(
+                    pi_codes, pi_f_add, pi_neighbors, pi_entry[c],
+                    pi_n_valid[c], pi_rnorm, pi_ctheta, c,
+                    lut_i, sumq_i, pi_s1[c], pi_s2[c],
+                    gf_i, sumqf_i, qnormf_i,
+                    ef=cfg.ef, max_iters=cfg.max_iters, dim=dim,
+                    mode=cfg.mode)
+            live = cl >= 0
+            gids = pi_node_ids[c, jnp.clip(res.ids, 0)]
+            gids = jnp.where((res.ids >= 0) & live, gids, -1)
+            return gids, res.rank, jnp.where(live, res.hops, 0)
+
+        return jax.vmap(one_lane)(lane_cl, lut, sumq, glutf, sumqf, qnormf)
+
+    return shard_search
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class PIMCQGEngine:
+    """Single-process engine (tests/benchmarks). The mesh-distributed variant
+    is produced by launch/anns_step.py building the same functions under
+    shard_map."""
+
+    def __init__(self, index: compact_index.CompactIndex,
+                 host: compact_index.HostStore,
+                 place: placement_mod.Placement,
+                 icfg: compact_index.IndexConfig,
+                 scfg: SearchConfig):
+        self.index = index
+        self.host = host
+        self.place = place
+        self.icfg = icfg
+        self.scfg = scfg
+        self.placed = _place(index, place)
+        self.shard_of = jnp.asarray(place.shard_of)
+        self.local_slot = jnp.asarray(place.local_slot)
+        self._search_cache: dict = {}
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def build(cls, key, x: np.ndarray, icfg: compact_index.IndexConfig,
+              scfg: SearchConfig, *, n_shards: int = 1,
+              freq: np.ndarray | None = None, verbose: bool = False
+              ) -> "PIMCQGEngine":
+        idx, host = compact_index.build_compact_index(key, x, icfg, verbose=verbose)
+        sizes = np.asarray(idx.n_valid)
+        bpc = sizes * compact_index.compact_bytes_per_node(icfg.dim, icfg.degree)
+        if freq is None:
+            freq = sizes.astype(np.float64)   # popularity ~ size as prior
+        pl = placement_mod.greedy_place(freq, bpc, n_shards)
+        return cls(idx, host, pl, icfg, scfg)
+
+    # -- query path ---------------------------------------------------------
+    def _build_search_fn(self, num_queries: int):
+        cfg, dim = self.scfg, self.icfg.dim
+        s = self.place.n_shards
+        capacity = max(1, int(np.ceil(num_queries * cfg.nprobe / s
+                                      * cfg.lane_capacity_factor)))
+        shard_fn = _make_shard_search(cfg, dim)
+
+        @jax.jit
+        def search_step(placed: PlacedIndex, centroids, rotation, vectors,
+                        queries):
+            probe, _ = ivf.cluster_filter(queries, centroids, nprobe=cfg.nprobe)
+            lane_q, lane_cl, inv, dropped = route_lanes(
+                probe, self.shard_of, self.local_slot,
+                n_shards=s, capacity=capacity)
+            cent_l = placed.centroids                        # (S, Cl, D)
+            gids, rank, hops = jax.vmap(
+                shard_fn, in_axes=(0,) * 12 + (None, None, 0, 0))(
+                placed.codes, placed.f_add, placed.neighbors, placed.entry,
+                placed.n_valid, placed.node_ids, placed.residual_norm,
+                placed.cos_theta, placed.rho, placed.shift1, placed.shift2,
+                cent_l, rotation, queries, lane_q, lane_cl)
+            # gather candidates back per query via the inverse lane map
+            flat_gids = gids.reshape(s * capacity, cfg.ef)
+            safe = jnp.clip(inv, 0)                          # (Q, P)
+            cand = flat_gids[safe]                           # (Q, P, EF)
+            cand = jnp.where((inv >= 0)[..., None], cand, -1)
+            cand = cand.reshape(num_queries, cfg.nprobe * cfg.ef)
+            out = rerank_mod.rerank(queries, cand, vectors, k=cfg.k)
+            stats = SearchStats(hops=hops, dropped_lanes=dropped)
+            return out, stats
+
+        return search_step
+
+    def search(self, queries) -> tuple[rerank_mod.RerankResult, SearchStats]:
+        queries = jnp.asarray(queries, jnp.float32)
+        nq = queries.shape[0]
+        if nq not in self._search_cache:
+            self._search_cache[nq] = self._build_search_fn(nq)
+        fn = self._search_cache[nq]
+        return fn(self.placed, self.index.centroids, self.index.rotation,
+                  self.host.vectors, queries)
+
+    # -- reporting ----------------------------------------------------------
+    def footprint(self) -> dict:
+        n = int(np.asarray(self.index.n_valid).sum())
+        return compact_index.footprint_report(self.icfg.dim, self.icfg.degree, n)

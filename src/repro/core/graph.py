@@ -1,0 +1,106 @@
+"""Per-cluster proximity-graph construction.
+
+PIMCQG keeps SymphonyQG's graph-based search but makes the IVF cluster the
+unit of deployment: each cluster owns a self-contained proximity graph whose
+adjacency lists store *only neighbor IDs* (local to the cluster) — all
+quantization metadata moved to the canonical per-node arrays (paper §IV-A).
+
+Construction here is the standard recipe:
+  1. exact kNN graph inside the cluster (chunked brute force — clusters are
+     bounded by PU-local memory, ~1e5 nodes at billion scale),
+  2. robust (occlusion) pruning a la Vamana/HNSW with slack ``prune_alpha``
+     to cap out-degree at R while keeping navigability,
+  3. medoid entry point.
+
+Everything is jit-compatible with static shapes: adjacency is a dense
+(N, R) int32 array padded with ``INVALID``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INVALID = jnp.int32(-1)
+
+__all__ = ["ClusterGraph", "build_cluster_graph", "INVALID"]
+
+
+class ClusterGraph(NamedTuple):
+    neighbors: jax.Array   # (N, R) int32, local ids, -1 padded
+    entry: jax.Array       # () int32 — medoid
+    n_valid: jax.Array     # () int32 — actual node count (<= padded N)
+
+
+def _sqdist_mat(x: jax.Array, y: jax.Array) -> jax.Array:
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    y2 = jnp.sum(y * y, axis=-1)
+    return x2 + y2[None, :] - 2.0 * (x @ y.T)
+
+
+def _knn(x: jax.Array, k: int, valid: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Exact kNN ids/dists (excluding self) among valid rows."""
+    d = _sqdist_mat(x, x)
+    n = x.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    big = jnp.asarray(jnp.inf, d.dtype)
+    d = jnp.where(eye | ~valid[None, :], big, d)
+    neg, ids = jax.lax.top_k(-d, k)
+    return ids.astype(jnp.int32), -neg
+
+
+def _robust_prune_row(cand_ids: jax.Array, cand_d: jax.Array, x: jax.Array,
+                      r: int, prune_alpha: float) -> jax.Array:
+    """Vamana-style occlusion pruning for one node.
+
+    Iterate candidates in distance order; keep c unless an already-kept
+    neighbor p "occludes" it: alpha * d(p, c) < d(node, c).
+    Static-shape formulation: O(C^2) pairwise distances among candidates.
+    """
+    c = cand_ids.shape[0]
+    xc = x[cand_ids]                                   # (C, D)
+    dcc = _sqdist_mat(xc, xc)                          # (C, C)
+
+    def body(i, state):
+        kept_mask, kept_cnt, occluded = state
+        can_keep = (~occluded[i]) & (kept_cnt < r) & (cand_d[i] < jnp.inf)
+        kept_mask = kept_mask.at[i].set(can_keep)
+        kept_cnt = kept_cnt + can_keep.astype(jnp.int32)
+        # everything this kept point occludes
+        occ_new = can_keep & (prune_alpha * dcc[i] < cand_d)
+        return kept_mask, kept_cnt, occluded | occ_new
+
+    kept, _, _ = jax.lax.fori_loop(
+        0, c, body, (jnp.zeros((c,), bool), jnp.int32(0), jnp.zeros((c,), bool)))
+    # compact kept ids to the front, pad with INVALID
+    order = jnp.argsort(~kept, stable=True)            # kept first, in distance order
+    out = jnp.where(kept[order], cand_ids[order], INVALID)
+    return out[:r]
+
+
+@functools.partial(jax.jit, static_argnames=("r", "knn_k", "prune_alpha"))
+def build_cluster_graph(x: jax.Array, valid: jax.Array, *, r: int = 32,
+                        knn_k: int = 64, prune_alpha: float = 1.2) -> ClusterGraph:
+    """Build the graph for one (padded) cluster.
+
+    x:     (N, D) node vectors, rows >= n_valid are padding
+    valid: (N,) bool
+    """
+    n = x.shape[0]
+    knn_k = min(knn_k, max(n - 1, 1))
+    ids, d = _knn(x, knn_k, valid)
+    neigh = jax.vmap(lambda ci, cd: _robust_prune_row(ci, cd, x, r, prune_alpha))(ids, d)
+    # ensure padded rows have no edges and no edge targets a padded row
+    neigh = jnp.where(valid[:, None], neigh, INVALID)
+    tgt_ok = (neigh >= 0) & valid[jnp.clip(neigh, 0)]
+    neigh = jnp.where(tgt_ok, neigh, INVALID)
+
+    # medoid entry point: valid node nearest to the (valid-)mean
+    mean = jnp.sum(jnp.where(valid[:, None], x, 0.0), axis=0) / jnp.maximum(jnp.sum(valid), 1)
+    d2m = jnp.sum((x - mean) ** 2, axis=-1)
+    d2m = jnp.where(valid, d2m, jnp.inf)
+    entry = jnp.argmin(d2m).astype(jnp.int32)
+    return ClusterGraph(neigh, entry, jnp.sum(valid).astype(jnp.int32))

@@ -1,0 +1,158 @@
+r"""O3 — Multiplication-free distance computation (paper §IV-C).
+
+RabitQ's estimator needs, per candidate node i:
+
+    d2_i = ||r_i||^2 + ||q_r||^2 - 2 ||r_i|| ||q_r|| * <o_bar_i, q_hat> / cos_theta_i
+           \_______/   \______/     \_________________________________________/
+           per-node     per-lane           the only per-node *multiplies*
+           additive     constant
+
+PIMCQG's observation: within an IVF cluster (all nodes encoded against the
+same centroid) the error factor cos_theta_i concentrates, so a cluster-wide
+constant ``alpha`` can replace it; 1/alpha is then snapped to the nearest
+shift-add representable value (1/0.8 = 1.25 = 1 + 2^-2) so the PU applies it
+with integer shift+add only (paper Eq 3, Fig 9: <0.08% recall loss).
+
+We additionally fold the *residual norm* into a cluster constant ``rho``
+(mean ||r_i||; the paper normalizes candidates so this term is near
+constant), leaving per-node state = one additive int32 ``f_add`` — this is
+the entire per-node metadata of the compact index beyond the code bits.
+
+Two PU-side evaluation modes, both implemented in kernels/binary_ip.py:
+  * ``mulfree``  — faithful PIMCQG: int LUT dot -> t = 2S - sumq ->
+                   t' = t + (t >> s1) [+ (t >> s2)] -> rank = f_add - t'.
+                   The LUT absorbs the per-lane scale (host-side prep).
+  * ``exact``    — SymphonyQG mode: per-node cos_theta & norm tables,
+                   fp multiply per node (the baseline Fig 17 compares against).
+
+TPU adaptation note (DESIGN.md §2): the MXU makes multiplies cheap, but this
+transform still (a) removes the per-node factor tables from the VMEM working
+set, (b) keeps the inner loop in int8/int32, and (c) makes the epilogue a
+uniform affine map that fuses into the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import rabitq
+
+__all__ = [
+    "AlphaShifts", "ClusterConstants", "calibrate_alpha",
+    "shiftadd_apply", "fold_node_factor", "prepare_int_lut",
+    "mulfree_rank", "exact_rank", "LUT_SCALE_BITS",
+]
+
+# Global fixed-point scale for f_add / LUT units. int32 headroom:
+# |rank| <= f_add + |t'| ~ 2^15 * few hundred -> safe under 2^30.
+LUT_SCALE_BITS = 12
+
+
+class AlphaShifts(NamedTuple):
+    """1/alpha ~= 1 + 2^-s1 + 2^-s2 (s2 = 31 disables the third term)."""
+    s1: jax.Array  # int32
+    s2: jax.Array  # int32
+    value: jax.Array  # f32 — the realized 1/alpha
+
+
+class ClusterConstants(NamedTuple):
+    alpha: jax.Array       # () f32 — cluster-wide cos_theta stand-in
+    rho: jax.Array         # () f32 — cluster-wide residual-norm stand-in
+    shifts: AlphaShifts
+
+
+def calibrate_alpha(cos_theta: jax.Array, residual_norm: jax.Array,
+                    valid: jax.Array | None = None) -> ClusterConstants:
+    """Per-cluster calibration (paper: 'alpha is calibrated during index
+    construction to the nearest hardware-friendly binary-shift equivalent')."""
+    if valid is None:
+        valid = jnp.ones(cos_theta.shape, bool)
+    w = valid.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    alpha = jnp.sum(cos_theta * w) / denom
+    rho = jnp.sum(residual_norm * w) / denom
+    inv = 1.0 / jnp.maximum(alpha, 1e-6)
+
+    # pick s1, s2 minimizing |inv - (1 + 2^-s1 + 2^-s2)| over a small grid
+    s = jnp.arange(1, 16, dtype=jnp.int32)
+    pows = jnp.exp2(-s.astype(jnp.float32))
+    cand1 = 1.0 + pows                                    # (15,)
+    cand2 = 1.0 + pows[:, None] + pows[None, :]           # (15, 15)
+    err1 = jnp.abs(cand1 - inv)
+    err2 = jnp.abs(cand2 - inv)
+    i1 = jnp.argmin(err1)
+    i2 = jnp.unravel_index(jnp.argmin(err2), err2.shape)
+    use2 = err2[i2] < err1[i1]
+    s1 = jnp.where(use2, s[i2[0]], s[i1]).astype(jnp.int32)
+    s2 = jnp.where(use2, s[i2[1]], jnp.int32(31))
+    val = jnp.where(use2, cand2[i2], cand1[i1])
+    return ClusterConstants(alpha, rho, AlphaShifts(s1, s2, val))
+
+
+def shiftadd_apply(t: jax.Array, shifts: AlphaShifts) -> jax.Array:
+    """x * (1/alpha) with integer shift+add only: x + (x>>s1) [+ (x>>s2)].
+
+    Arithmetic right shift keeps the sign-correct behaviour for negative t
+    (floor division by 2^s — a <1 LSB bias, absorbed by the fixed-point
+    scale)."""
+    t = t.astype(jnp.int32)
+    out = t + (t >> shifts.s1)
+    out = out + jnp.where(shifts.s2 >= 31, 0, t >> shifts.s2)
+    return out
+
+
+def fold_node_factor(residual_norm: jax.Array) -> jax.Array:
+    """Per-node additive constant f_add = round(||r_i||^2 * 2^LUT_SCALE_BITS).
+
+    This is the paper's ``RabitQFactor`` (query-independent term) in fixed
+    point; ||q_r||^2 is per-lane constant and dropped (does not affect
+    within-lane ranking, and the host rerank uses exact distances anyway)."""
+    return jnp.round(residual_norm.astype(jnp.float32) ** 2
+                     * (1 << LUT_SCALE_BITS)).astype(jnp.int32)
+
+
+def prepare_int_lut(q: jax.Array, centroid: jax.Array, rotation: jax.Array,
+                    consts: ClusterConstants, dim: int) -> tuple[jax.Array, jax.Array]:
+    """Host dispatch-stage LUT prep for one (query, cluster) lane.
+
+    Folds every per-lane float factor into the integer LUT so the PU-side
+    evaluation is adds/shifts only:
+
+        ideal term_i = 2 ||q_r|| rho <o_bar_i, q_hat>
+                     = 2 ||q_r|| rho (2 S_f - sumq_f) / sqrt(D)
+
+    so lut = round(g * kappa) with kappa = 2^LUT_SCALE_BITS * 2 ||q_r||
+    rho / sqrt(D); the 1/alpha factor is left for the PU shift-add (faithful
+    to the paper's division of labour). Returns (lut int32 (Dpad,), sumq int32).
+    """
+    qlut = rabitq.prepare_query(q, centroid, rotation)
+    kappa = (2.0 ** LUT_SCALE_BITS) * 2.0 * qlut.query_norm * consts.rho \
+        / jnp.sqrt(jnp.asarray(dim, jnp.float32))
+    lut = jnp.round(qlut.lut * kappa).astype(jnp.int32)
+    pad = (-dim) % 8
+    if pad:
+        lut = jnp.pad(lut, (0, pad))
+    return lut, jnp.sum(lut)
+
+
+def mulfree_rank(packed: jax.Array, f_add: jax.Array, lut: jax.Array,
+                 sumq: jax.Array, shifts: AlphaShifts, dim: int) -> jax.Array:
+    """Reference PU-side mulfree evaluation (oracle for kernels/binary_ip.py).
+
+    rank_i ~ 2^LUT_SCALE_BITS * d2_i (up to the dropped per-lane ||q_r||^2).
+    Lower is closer. (N,) int32.
+    """
+    bits = rabitq.unpack_codes(packed, dim).astype(jnp.int32)
+    s = bits @ lut[:dim]
+    t = 2 * s - sumq
+    return f_add - shiftadd_apply(t, shifts)
+
+
+def exact_rank(codes: rabitq.RabitQCodes, q: rabitq.QueryLUT) -> jax.Array:
+    """SymphonyQG-mode (node-specific cos_theta) ranking value = est. sqdist."""
+    return rabitq.estimate_sqdist(codes, q)

@@ -1,0 +1,350 @@
+"""O2 (online half) — asynchronous pipelined query scheduling (paper §IV-B).
+
+Three artifacts:
+
+  * ``LinkModel`` — parametric host<->PU transfer-latency model reproducing
+    the *shape* of the paper's Fig 6 measurement (small transfers pay a fixed
+    setup cost; transfers past a knee congest superlinearly). Presets for
+    UPMEM, TPU ICI and PCIe.
+
+  * ``EventSimulator`` — discrete-event simulator of the five overlapped
+    stages (① host prep ② host->PU transfer ③ in-PU search ④ PU->host return
+    ⑤ host rerank) under the four scheduling policies compared in Fig 16:
+    per-query, batch-synchronous, pipeline with mini-batch=1, and PIMCQG's
+    dynamic mini-batching (fill threshold OR waiting-time limit). Used for
+    the scheduling-policy study and the Fig 14 breakdown.
+
+  * ``tune_minibatch`` — Eq (1): N* = argmin_N max(T_pre, T_proc, T_post)/N,
+    with the paper's refinement of keeping transfers inside the fast range.
+
+  * ``AsyncExecutor`` — *real* overlapped execution on top of a
+    PIMCQGEngine: JAX dispatch is asynchronous, so stage ③ (device) of batch
+    i runs while the host reranks batch i-1 and preps batch i+1; FIFO depth
+    bounds in-flight work (the paper's flow control).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from collections import deque
+from typing import Callable
+
+import numpy as np
+
+__all__ = [
+    "LinkModel", "UPMEM_LINK", "TPU_ICI_LINK", "PCIE_LINK",
+    "StageCosts", "tune_minibatch",
+    "EventSimulator", "SimReport", "AsyncExecutor",
+]
+
+
+# ---------------------------------------------------------------------------
+# Transfer model (Fig 6)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """latency(bytes) = setup + bytes/bw * (1 + congestion * max(0, b/knee - 1))"""
+    setup_s: float            # fixed per-transfer cost
+    bw_bytes_s: float         # asymptotic bandwidth
+    knee_bytes: float = 8192  # paper: "fast communicating range (under 8 KB)"
+    congestion: float = 0.15  # superlinear penalty beyond the knee
+
+    def latency(self, nbytes: float) -> float:
+        lin = nbytes / self.bw_bytes_s
+        over = max(0.0, nbytes / self.knee_bytes - 1.0)
+        return self.setup_s + lin * (1.0 + self.congestion * over)
+
+
+UPMEM_LINK = LinkModel(setup_s=2.0e-6, bw_bytes_s=150e9 / 2560, knee_bytes=8192,
+                       congestion=0.30)   # per-DPU share of the 150 GB/s bus
+TPU_ICI_LINK = LinkModel(setup_s=1.0e-6, bw_bytes_s=50e9, knee_bytes=1 << 20,
+                         congestion=0.05)
+PCIE_LINK = LinkModel(setup_s=5.0e-6, bw_bytes_s=32e9, knee_bytes=1 << 20,
+                      congestion=0.10)
+
+
+# ---------------------------------------------------------------------------
+# Eq (1) mini-batch tuner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StageCosts:
+    """Per-mini-batch stage costs as functions of batch size N_B (seconds).
+    t_xfer_in/out are derived from the LinkModel + per-query payload bytes."""
+    t_pre: Callable[[int], float]
+    t_proc: Callable[[int], float]
+    t_post: Callable[[int], float]
+    link: LinkModel = TPU_ICI_LINK
+    query_bytes: int = 512        # LUT payload per query
+    result_bytes: int = 512       # EF candidate ids+ranks per query
+
+    def t_in(self, n: int) -> float:
+        return self.link.latency(n * self.query_bytes)
+
+    def t_out(self, n: int) -> float:
+        return self.link.latency(n * self.result_bytes)
+
+    def stage_max(self, n: int) -> float:
+        pre = self.t_pre(n) + self.t_in(n)
+        post = self.t_out(n) + self.t_post(n)
+        return max(pre, self.t_proc(n), post)
+
+
+def tune_minibatch(costs: StageCosts, candidates=(1, 2, 4, 8, 16, 32, 64, 128)
+                   ) -> tuple[int, dict[int, float]]:
+    """Eq (1): choose N* minimizing per-query pipelined time, preferring sizes
+    whose transfers stay inside the link's fast range (paper §IV-B2)."""
+    per_q = {n: costs.stage_max(n) / n for n in candidates}
+    best = min(per_q, key=per_q.__getitem__)
+    # paper refinement: prefer the smallest N whose payload is in-knee and
+    # within 5% of the optimum (keeps latency low at equal throughput)
+    for n in sorted(candidates):
+        in_knee = n * max(costs.query_bytes, costs.result_bytes) <= costs.link.knee_bytes
+        if in_knee and per_q[n] <= 1.05 * per_q[best]:
+            return n, per_q
+    return best, per_q
+
+
+# ---------------------------------------------------------------------------
+# Event-driven simulator (Fig 7/8/14/16)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SimReport:
+    qps: float
+    mean_latency_s: float
+    stage_busy: dict          # stage -> busy fraction of makespan
+    stage_time: dict          # stage -> total seconds
+    makespan_s: float
+    n_queries: int
+
+
+class EventSimulator:
+    """Five-stage pipeline over P PUs with one host prep thread, one shared
+    host<->PU link (half-duplex, like UPMEM's rank-level bus), and a host
+    rerank pool.
+
+    Policies:
+      per_query   — every query is its own transfer, serialized on the link
+      batch_sync  — global barrier per batch (Fig 7a): prep all -> xfer all ->
+                    all PUs search -> xfer back -> rerank all, strictly serial
+      pipeline    — asynchronous 5-stage pipeline with fixed mini-batch size
+      dynamic     — pipeline + per-PU buffers flushed on fill-threshold OR
+                    waiting-time limit (Fig 7c)
+    """
+
+    def __init__(self, n_pus: int, costs: StageCosts, *,
+                 rerank_workers: int = 4, fifo_depth: int = 4,
+                 full_duplex: bool = False):
+        self.n_pus = n_pus
+        self.costs = costs
+        self.rerank_workers = rerank_workers
+        self.fifo_depth = fifo_depth
+        self.full_duplex = full_duplex
+
+    # -- shared machinery: a real discrete-event simulation ------------------
+    # Resources: prep (1 server), link (half-duplex: 1 server for both
+    # directions — UPMEM's rank bus; set full_duplex=True for ICI-like
+    # links), one server per PU, rerank pool (W servers). Each stage has its
+    # own FIFO; stages of different batches overlap freely — this is exactly
+    # the concurrency structure of Fig 8 (async pipeline).
+    def _run_batches(self, batches, warm_arrival=None):
+        """batches: list of (pu, n_queries, ready_time); returns SimReport."""
+        c = self.costs
+        nres_in = "link"
+        nres_out = "link_out" if self.full_duplex else "link"
+        free = {"prep": 0.0, "link": 0.0, "link_out": 0.0}
+        free_pu = np.zeros(self.n_pus)
+        free_rr = np.zeros(self.rerank_workers)
+        busy = {"prep": 0.0, "xfer_in": 0.0, "search": 0.0,
+                "xfer_out": 0.0, "rerank": 0.0}
+        STAGES = ("prep", "xfer_in", "search", "xfer_out", "rerank")
+
+        # event heap: (ready_time, seq, batch_idx, stage_idx)
+        ev: list = []
+        for i, (pu, n, ready) in enumerate(batches):
+            heapq.heappush(ev, (ready, i, 0))
+        inflight = 0
+        gate_wait: deque = deque()          # batches held back by flow control
+        done_t = {}
+        end = 0.0
+        limit = self.fifo_depth * self.n_pus
+
+        def duration(stage, pu, n):
+            if stage == 0:
+                return c.t_pre(n)
+            if stage == 1:
+                return c.t_in(n)
+            if stage == 2:
+                return c.t_proc(n)
+            if stage == 3:
+                return c.t_out(n)
+            return c.t_post(n)
+
+        while ev:
+            ready, i, stage = heapq.heappop(ev)
+            pu, n, _ = batches[i]
+            if stage == 0:
+                if inflight >= limit:
+                    gate_wait.append((i, ready))
+                    continue
+                inflight += 1
+            # acquire the stage's resource (FCFS by event order)
+            if stage == 0:
+                start = max(ready, free["prep"]); free["prep"] = start + duration(0, pu, n)
+                tdone = free["prep"]
+            elif stage == 1:
+                start = max(ready, free[nres_in]); free[nres_in] = start + duration(1, pu, n)
+                tdone = free[nres_in]
+            elif stage == 2:
+                start = max(ready, free_pu[pu]); free_pu[pu] = start + duration(2, pu, n)
+                tdone = free_pu[pu]
+            elif stage == 3:
+                start = max(ready, free[nres_out]); free[nres_out] = start + duration(3, pu, n)
+                tdone = free[nres_out]
+            else:
+                w = int(np.argmin(free_rr))
+                start = max(ready, free_rr[w]); free_rr[w] = start + duration(4, pu, n)
+                tdone = free_rr[w]
+            busy[STAGES[stage]] += tdone - start
+            if stage < 4:
+                heapq.heappush(ev, (tdone, i, stage + 1))
+            else:
+                done_t[i] = tdone
+                end = max(end, tdone)
+                inflight -= 1
+                if gate_wait:
+                    j, jready = gate_wait.popleft()
+                    heapq.heappush(ev, (max(jready, tdone), j, 0))
+
+        nq = sum(n for _, n, _ in batches)
+        lat = float(np.mean([done_t[i] - batches[i][2] for i in done_t]))
+        return SimReport(qps=nq / end if end > 0 else 0.0,
+                         mean_latency_s=lat,
+                         stage_busy={k: v / end for k, v in busy.items()},
+                         stage_time=dict(busy), makespan_s=end, n_queries=nq)
+
+    # -- policies -------------------------------------------------------------
+    def per_query(self, n_queries: int, pu_of_query=None) -> SimReport:
+        pus = pu_of_query if pu_of_query is not None \
+            else np.arange(n_queries) % self.n_pus
+        batches = [(int(pus[i]), 1, 0.0) for i in range(n_queries)]
+        return self._run_batches(batches, [0.0] * n_queries)
+
+    def batch_sync(self, n_queries: int, global_batch: int, pu_of_query=None
+                   ) -> SimReport:
+        """Strict barriers (Fig 7a): stages of one global batch never overlap
+        with the next; slowest PU gates everything. Load skew across PUs is
+        injected via pu_of_query."""
+        c = self.costs
+        pus = pu_of_query if pu_of_query is not None \
+            else np.arange(n_queries) % self.n_pus
+        t = 0.0
+        busy = {"prep": 0.0, "xfer_in": 0.0, "search": 0.0,
+                "xfer_out": 0.0, "rerank": 0.0}
+        nq = 0
+        for start in range(0, n_queries, global_batch):
+            counts = np.bincount(pus[start:start + global_batch],
+                                 minlength=self.n_pus)
+            nb = int(counts.sum()); nq += nb
+            tp = c.t_pre(nb); busy["prep"] += tp
+            ti = sum(c.t_in(int(x)) for x in counts if x)   # serialized on link
+            busy["xfer_in"] += ti
+            ts = max((c.t_proc(int(x)) for x in counts if x), default=0.0)
+            busy["search"] += ts                             # barrier: max PU
+            to = sum(c.t_out(int(x)) for x in counts if x)
+            busy["xfer_out"] += to
+            tr = c.t_post(nb)                                # host serial rerank
+            busy["rerank"] += tr
+            t += tp + ti + ts + to + tr
+        return SimReport(qps=nq / t if t else 0.0, mean_latency_s=t / max(nq, 1),
+                         stage_busy={k: v / t for k, v in busy.items()},
+                         stage_time=dict(busy), makespan_s=t, n_queries=nq)
+
+    def pipeline(self, n_queries: int, minibatch: int, pu_of_query=None
+                 ) -> SimReport:
+        pus = pu_of_query if pu_of_query is not None \
+            else np.arange(n_queries) % self.n_pus
+        per_pu: dict[int, list] = {}
+        for i in range(n_queries):
+            per_pu.setdefault(int(pus[i]), []).append(i)
+        batches = []
+        for pu, qs in per_pu.items():
+            for s in range(0, len(qs), minibatch):
+                batches.append((pu, len(qs[s:s + minibatch]), 0.0))
+        # round-robin interleave across PUs to mimic arrival order
+        batches.sort(key=lambda b: b[2])
+        return self._run_batches(batches, None)
+
+    def dynamic(self, arrival_times: np.ndarray, pu_of_query: np.ndarray,
+                threshold: int, wait_limit_s: float) -> SimReport:
+        """Fig 7(c): per-PU buffers; flush on fill OR oldest-query timeout."""
+        order = np.argsort(arrival_times)
+        buf: dict[int, list] = {p: [] for p in range(self.n_pus)}
+        oldest: dict[int, float] = {}
+        batches = []
+
+        def flush(pu, now):
+            if buf[pu]:
+                batches.append((pu, len(buf[pu]), now))
+                buf[pu] = []
+                oldest.pop(pu, None)
+
+        for i in order:
+            now = float(arrival_times[i])
+            # timeout flushes due before this arrival
+            for pu in list(oldest):
+                if now - oldest[pu] >= wait_limit_s:
+                    flush(pu, oldest[pu] + wait_limit_s)
+            pu = int(pu_of_query[i])
+            buf[pu].append(i)
+            oldest.setdefault(pu, now)
+            if len(buf[pu]) >= threshold:
+                flush(pu, now)
+        tend = float(arrival_times.max()) if len(arrival_times) else 0.0
+        for pu in range(self.n_pus):
+            flush(pu, tend)
+        batches.sort(key=lambda b: b[2])
+        return self._run_batches(batches, None)
+
+
+# ---------------------------------------------------------------------------
+# Real overlapped executor over a PIMCQGEngine
+# ---------------------------------------------------------------------------
+
+class AsyncExecutor:
+    """JAX-native realization of the async pipeline: device dispatch of
+    mini-batch i+1 is enqueued before the host blocks on batch i (JAX's async
+    dispatch gives stage overlap for free); a bounded deque implements the
+    paper's FIFO flow control."""
+
+    def __init__(self, engine, minibatch: int, fifo_depth: int = 4):
+        self.engine = engine
+        self.minibatch = minibatch
+        self.fifo_depth = fifo_depth
+
+    def run(self, queries: np.ndarray) -> tuple[np.ndarray, np.ndarray, float]:
+        nb = self.minibatch
+        n = len(queries)
+        pad = (-n) % nb
+        qp = np.concatenate([queries, np.repeat(queries[-1:], pad, 0)]) \
+            if pad else queries
+        inflight: deque = deque()
+        out_ids, out_d = [], []
+        t0 = time.perf_counter()
+        for s in range(0, len(qp), nb):
+            res, _ = self.engine.search(qp[s:s + nb])   # async dispatch
+            inflight.append(res)
+            if len(inflight) >= self.fifo_depth:
+                r = inflight.popleft()
+                out_ids.append(np.asarray(r.ids)); out_d.append(np.asarray(r.dists))
+        while inflight:
+            r = inflight.popleft()
+            out_ids.append(np.asarray(r.ids)); out_d.append(np.asarray(r.dists))
+        dt = time.perf_counter() - t0
+        ids = np.concatenate(out_ids)[:n]
+        ds = np.concatenate(out_d)[:n]
+        return ids, ds, dt

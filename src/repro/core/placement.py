@@ -1,0 +1,79 @@
+"""O2 (offline half) — greedy frequency-aware cluster -> PU placement.
+
+Paper §IV-B1: "PIMCQG first places compact-index clusters onto PUs using a
+greedy load-balancing policy based on estimated or profiled access frequency
+... Because the compact index substantially reduces the memory footprint of
+each cluster, the scheduler has more flexibility to balance load while
+respecting the PU-local memory budget."
+
+On the TPU mesh a "PU" is one shard of the ``model`` axis. The placement
+produces a permutation of cluster ids such that reshaping the permuted
+cluster-stacked arrays to (n_shards, clusters_per_shard, ...) yields the
+balanced layout, plus the inverse map used by the dispatcher.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["Placement", "greedy_place"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    order: np.ndarray          # (C,) cluster ids in shard-major order
+    shard_of: np.ndarray       # (C,) shard id per original cluster id
+    local_slot: np.ndarray     # (C,) slot within the shard
+    n_shards: int
+    per_shard: int             # clusters per shard (padded equal)
+    load: np.ndarray           # (S,) final per-shard load estimate
+
+    def permute(self, arr: np.ndarray) -> np.ndarray:
+        """Reorder a (C, ...) cluster-stacked array into shard-major order."""
+        return arr[self.order]
+
+
+def greedy_place(freq: np.ndarray, bytes_per_cluster: np.ndarray,
+                 n_shards: int, mem_budget: int | None = None) -> Placement:
+    """LPT-style greedy: clusters in decreasing (freq-weighted) load order,
+    each to the least-loaded shard with both load- and memory-headroom.
+
+    freq: (C,) estimated/profiled access frequency (queries hitting the
+    cluster); bytes_per_cluster: (C,) compact-index bytes.
+    """
+    c = len(freq)
+    assert c % n_shards == 0, (
+        f"{c} clusters not divisible by {n_shards} shards — pad n_clusters")
+    per_shard = c // n_shards
+    load = np.zeros(n_shards, np.float64)
+    mem = np.zeros(n_shards, np.float64)
+    count = np.zeros(n_shards, np.int64)
+    shard_of = np.full(c, -1, np.int32)
+
+    order_desc = np.argsort(-(freq.astype(np.float64) + 1e-9))
+    for cid in order_desc:
+        # shards still having a slot, sorted by load; memory budget as a
+        # soft constraint (fall back to least-loaded if all would exceed)
+        open_mask = count < per_shard
+        cand = np.nonzero(open_mask)[0]
+        if mem_budget is not None:
+            fits = cand[mem[cand] + bytes_per_cluster[cid] <= mem_budget]
+            if len(fits):
+                cand = fits
+        s = cand[np.argmin(load[cand])]
+        shard_of[cid] = s
+        load[s] += freq[cid]
+        mem[s] += bytes_per_cluster[cid]
+        count[s] += 1
+
+    # shard-major order with stable slot assignment
+    order = np.argsort(shard_of * c + np.arange(c), kind="stable")
+    local_slot = np.empty(c, np.int32)
+    for s in range(n_shards):
+        members = order[s * per_shard:(s + 1) * per_shard]
+        local_slot[members] = np.arange(per_shard)
+    return Placement(order=order.astype(np.int32), shard_of=shard_of,
+                     local_slot=local_slot, n_shards=n_shards,
+                     per_shard=per_shard, load=load)

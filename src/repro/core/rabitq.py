@@ -1,0 +1,164 @@
+"""RabitQ quantization (Gao & Long, SIGMOD'24) — the estimator PIMCQG inherits.
+
+RabitQ quantizes a unit vector ``o`` (here: the centroid residual of a data
+point, normalized) to a single bit per rotated dimension:
+
+    z    = P^T o                      (P: random orthogonal rotation)
+    code = z > 0                      (1 bit / dim)
+    o_bar= P sign(z)/sqrt(D)          (reconstruction, unit norm)
+
+The key quantities used at search time are
+
+    cos_theta = <o_bar, o> = sum(|z|)/sqrt(D)       (per-node error factor)
+    <o, q_hat> ~= <o_bar, q_hat> / cos_theta        (unbiased-ish estimator)
+
+with the binary-domain identity (x_bar = sign(z)/sqrt(D), g = P^T q_hat):
+
+    <o_bar, q_hat> = <x_bar, g> = (2 * S - sum(g)) / sqrt(D)
+    S = sum of g over dimensions whose code bit is set.
+
+``S`` is the additions-only lookup sum that PIMCQG's PU-side kernel computes
+(see kernels/binary_ip.py); everything else is folded into per-node /
+per-query constants (core/mulfree.py).
+
+All functions are pure JAX and jit-friendly. Shapes: data (N, D), one
+centroid (D,) per call — cluster batching is vmapped by the caller.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "RabitQCodes",
+    "QueryLUT",
+    "random_rotation",
+    "encode",
+    "prepare_query",
+    "estimate_inner",
+    "estimate_sqdist",
+    "pack_codes",
+    "unpack_codes",
+]
+
+
+class RabitQCodes(NamedTuple):
+    """Canonical (per-node, per-cluster) RabitQ encoding — PIMCQG O1 stores
+    exactly one of these per node, shared by every incoming edge."""
+
+    packed: jax.Array      # (N, D//8) uint8 — bit-packed sign codes
+    residual_norm: jax.Array  # (N,) f32 — ||x - c||
+    cos_theta: jax.Array   # (N,) f32 — <o_bar, o>, the per-node error factor
+    dim: int               # unpadded D
+
+
+class QueryLUT(NamedTuple):
+    """Per-(query, cluster) lookup table prepared on the host (dispatch stage)."""
+
+    lut: jax.Array         # (D,) f32 — rotated unit query residual g = P^T q_hat
+    sum_lut: jax.Array     # () f32 — sum(g)
+    query_norm: jax.Array  # () f32 — ||q - c||
+
+
+def random_rotation(key: jax.Array, dim: int, dtype=jnp.float32) -> jax.Array:
+    """Random orthogonal matrix P (Haar, via QR of a Gaussian)."""
+    return jax.random.orthogonal(key, dim, dtype=dtype)
+
+
+def _bit_weights(dtype=jnp.uint8) -> jax.Array:
+    return (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8)).astype(dtype)
+
+
+def pack_codes(bits: jax.Array) -> jax.Array:
+    """(..., D) bool/int {0,1} -> (..., D//8) uint8, little-endian bit order.
+
+    D must be a multiple of 8 (pad with zero dims upstream; a zero LUT entry
+    makes padded dims inert).
+    """
+    *lead, d = bits.shape
+    assert d % 8 == 0, f"dim {d} not a multiple of 8"
+    b = bits.astype(jnp.uint8).reshape(*lead, d // 8, 8)
+    return jnp.sum(b * _bit_weights(), axis=-1).astype(jnp.uint8)
+
+
+def unpack_codes(packed: jax.Array, dim: int) -> jax.Array:
+    """(..., D//8) uint8 -> (..., D) int8 {0,1}."""
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (packed[..., :, None] >> shifts) & jnp.uint8(1)
+    return bits.reshape(*packed.shape[:-1], packed.shape[-1] * 8)[..., :dim].astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("dim",))
+def encode(x: jax.Array, centroid: jax.Array, rotation: jax.Array, *, dim: int | None = None) -> RabitQCodes:
+    """Encode points ``x`` (N, D) against one ``centroid`` (D,).
+
+    This is PIMCQG's canonical-code construction: a single code per node,
+    relative to the node's IVF centroid (paper §IV-A1), replacing
+    SymphonyQG's per-edge codes.
+    """
+    dim = dim or x.shape[-1]
+    resid = x - centroid                                  # (N, D)
+    norm = jnp.linalg.norm(resid, axis=-1)                # (N,)
+    safe = jnp.maximum(norm, 1e-12)[:, None]
+    o = resid / safe                                      # unit residuals
+    z = o @ rotation                                      # P^T o (rotation is (D, D); o P == P^T o rows)
+    bits = z > 0
+    # cos(theta) = <o_bar, o> = <sign(z)/sqrt(D), z> = sum|z|/sqrt(D)
+    cos_theta = jnp.sum(jnp.abs(z), axis=-1) / jnp.sqrt(jnp.asarray(dim, z.dtype))
+    # pad bit dim to a byte boundary
+    pad = (-dim) % 8
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    return RabitQCodes(pack_codes(bits), norm, cos_theta, dim)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def prepare_query(q: jax.Array, centroid: jax.Array, rotation: jax.Array) -> QueryLUT:
+    """Host-side query prep for one (query, cluster) lane (paper Fig 4 step 1)."""
+    resid = q - centroid
+    qnorm = jnp.linalg.norm(resid)
+    g = (resid / jnp.maximum(qnorm, 1e-12)) @ rotation
+    return QueryLUT(g, jnp.sum(g), qnorm)
+
+
+def binary_dot(packed: jax.Array, lut: jax.Array, dim: int) -> jax.Array:
+    """S-term: sum of lut over set bits. (N, D//8) x (D,) -> (N,).
+
+    Reference implementation; the production path is kernels/binary_ip.py
+    (bit-packed int8 MXU matmul). Padded LUT entries must be zero.
+    """
+    bits = unpack_codes(packed, dim).astype(lut.dtype)    # (N, D)
+    return bits @ lut[:dim]
+
+
+def estimate_inner(codes: RabitQCodes, q: QueryLUT) -> jax.Array:
+    """Estimate <o, q_hat> for all nodes: (2S - sum(g)) / (sqrt(D) * cos_theta)."""
+    s = binary_dot(codes.packed, q.lut, codes.dim)
+    obar_q = (2.0 * s - q.sum_lut) / jnp.sqrt(jnp.asarray(codes.dim, jnp.float32))
+    return obar_q / jnp.maximum(codes.cos_theta, 1e-6)
+
+
+def estimate_sqdist(codes: RabitQCodes, q: QueryLUT) -> jax.Array:
+    """Approximate ||x - q||^2 via the residual decomposition
+
+        ||x-q||^2 = ||x-c||^2 + ||q-c||^2 - 2 ||x-c|| ||q-c|| <o, q_hat>
+
+    This is the exact (node-specific cos_theta) SymphonyQG-mode estimator;
+    PIMCQG's cluster-alpha variant lives in core/mulfree.py.
+    """
+    est = estimate_inner(codes, q)
+    return (
+        codes.residual_norm**2
+        + q.query_norm**2
+        - 2.0 * codes.residual_norm * q.query_norm * est
+    )
+
+
+def exact_sqdist(x: jax.Array, q: jax.Array) -> jax.Array:
+    """||x - q||^2 oracle, (N, D) x (D,) -> (N,)."""
+    d = x - q
+    return jnp.sum(d * d, axis=-1)

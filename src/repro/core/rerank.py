@@ -1,0 +1,54 @@
+"""Host-side exact reranking (paper §IV-A2, step 4).
+
+PIMCQG evicts raw vectors from PIM; the PUs return over-fetched approximate
+candidate sets (EF per lane) and the host recomputes exact distances for the
+union and takes the final top-k. This is stage 5 of the async pipeline and —
+per the paper's own breakdown (Fig 14) — the dominant stage, which is why it
+must overlap with in-PIM search (core/pipeline.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["RerankResult", "rerank"]
+
+
+class RerankResult(NamedTuple):
+    ids: jax.Array    # (Q, k) int32 global ids, -1 pad
+    dists: jax.Array  # (Q, k) f32 exact squared distances
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def rerank(queries: jax.Array, cand_ids: jax.Array, vectors: jax.Array,
+           *, k: int) -> RerankResult:
+    """Exact rerank.
+
+    queries (Q, D) f32; cand_ids (Q, C) int32 global ids (-1 = pad, duplicates
+    allowed — deduped here); vectors (N, D) f32 host store.
+    """
+    q2 = jnp.sum(queries * queries, axis=-1, keepdims=True)        # (Q, 1)
+    safe = jnp.clip(cand_ids, 0)
+    cand = vectors[safe]                                           # (Q, C, D)
+    c2 = jnp.sum(cand * cand, axis=-1)                             # (Q, C)
+    dots = jnp.einsum("qd,qcd->qc", queries, cand)
+    d2 = q2 + c2 - 2.0 * dots
+
+    # mask pads and duplicate ids (keep first occurrence): compare each id
+    # against all previous positions
+    c = cand_ids.shape[-1]
+    prev = cand_ids[:, None, :] == cand_ids[:, :, None]            # (Q, C, C)
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    dup = jnp.any(prev & tri[None], axis=-1)                       # (Q, C)
+    bad = (cand_ids < 0) | dup
+    d2 = jnp.where(bad, jnp.inf, d2)
+
+    neg, pos = jax.lax.top_k(-d2, k)
+    ids = jnp.take_along_axis(cand_ids, pos, axis=-1)
+    dists = -neg
+    ids = jnp.where(jnp.isfinite(dists), ids, -1)
+    return RerankResult(ids.astype(jnp.int32), dists.astype(jnp.float32))

@@ -1,0 +1,77 @@
+"""Deterministic synthetic data pipelines.
+
+Tokens: a mixture of Zipf-like unigram draws and short copy motifs so the
+loss is neither trivial nor flat; fully determined by (seed, step) so any
+host can regenerate its own shard — the standard recipe for restart-safe
+distributed input pipelines (no data state in checkpoints beyond `step`).
+
+Vectors: clustered Gaussians matched to the ANNS benchmark dimensionalities
+(SIFT/SPACEV/SSN-like D), used by the PIMCQG benchmarks and tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenDataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+
+
+def token_batch(cfg: TokenDataConfig, step: int | jax.Array) -> dict:
+    """One global batch: {'tokens': (B, S) i32, 'labels': (B, S) i32}."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    k1, k2 = jax.random.split(key)
+    # Zipf via inverse-CDF on uniform: rank ~ u^(-1/(a-1)) (truncated)
+    u = jax.random.uniform(k1, (cfg.global_batch, cfg.seq_len + 1),
+                           minval=1e-6, maxval=1.0)
+    rank = jnp.clip((u ** (-1.0 / (cfg.zipf_a - 1.0))).astype(jnp.int32) - 1,
+                    0, cfg.vocab_size - 1)
+    # sprinkle copy motifs: with p=.2 repeat the token 8 positions back
+    rep = jax.random.uniform(k2, rank.shape) < 0.2
+    shifted = jnp.roll(rank, 8, axis=1)
+    seq = jnp.where(rep, shifted, rank)
+    return {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+
+
+def clustered_vectors(seed: int, n: int, d: int, n_clusters: int,
+                      spread: float = 1.0, scale: float = 3.0
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """(x (N, D) f32, centers (K, D)) clustered-Gaussian dataset."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 1, (n_clusters, d)).astype(np.float32) * scale
+    sizes = np.full(n_clusters, n // n_clusters)
+    sizes[: n - sizes.sum()] += 1
+    xs = [centers[i] + rng.normal(0, spread, (sizes[i], d)).astype(np.float32)
+          for i in range(n_clusters)]
+    x = np.concatenate(xs).astype(np.float32)
+    rng.shuffle(x)
+    return x, centers
+
+
+def query_set(seed: int, x: np.ndarray, q: int, noise: float = 0.05
+              ) -> np.ndarray:
+    rng = np.random.default_rng(seed + 1)
+    base = x[rng.choice(len(x), q)]
+    return (base + rng.normal(0, noise, base.shape)).astype(np.float32)
+
+
+def ground_truth(x: np.ndarray, queries: np.ndarray, k: int,
+                 chunk: int = 512) -> np.ndarray:
+    """Exact top-k ids by brute force (chunked over queries)."""
+    out = np.empty((len(queries), k), np.int64)
+    x2 = (x * x).sum(-1)
+    for s in range(0, len(queries), chunk):
+        qc = queries[s:s + chunk]
+        d2 = x2[None, :] - 2.0 * qc @ x.T
+        out[s:s + chunk] = np.argsort(d2, axis=1)[:, :k]
+    return out

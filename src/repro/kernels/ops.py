@@ -1,0 +1,56 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Dispatch policy:
+  * On TPU the Pallas kernels run compiled (interpret=False).
+  * On CPU (this container) the same kernels run in interpret mode when
+    ``REPRO_FORCE_PALLAS=1`` (kernel tests / benchmarks); otherwise the
+    pure-jnp reference path is used — it is the same math and lets XLA fuse
+    the tiny per-beam-iteration evaluations (R ~ 32 rows), where a kernel
+    launch would be pure overhead even on TPU.
+  * ``full-scan`` sized problems (cluster_scan) prefer the kernel.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import binary_ip as _k
+from . import ref as _ref
+
+__all__ = ["binary_ip_rank", "cluster_scan_topk", "kernels_enabled"]
+
+_KERNEL_MIN_ROWS = 256  # below this, XLA-fused ref path wins even on TPU
+
+
+def kernels_enabled() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def binary_ip_rank(codes: jax.Array, f_add: jax.Array, lut: jax.Array,
+                   sumq: jax.Array, s1: jax.Array, s2: jax.Array,
+                   dim: int) -> jax.Array:
+    """O3 mulfree rank of N nodes. See kernels/ref.py for exact semantics."""
+    n = codes.shape[0]
+    if kernels_enabled() and n >= _KERNEL_MIN_ROWS:
+        return _k.binary_ip_rank(codes, f_add, lut, sumq, s1, s2, dim=dim,
+                                 interpret=jax.default_backend() != "tpu")
+    return _ref.binary_ip_rank_ref(codes, f_add, lut, sumq, s1, s2, dim)
+
+
+def cluster_scan_topk(codes: jax.Array, f_add: jax.Array, lut: jax.Array,
+                      sumq: jax.Array, s1: jax.Array, s2: jax.Array,
+                      n_valid: jax.Array, *, dim: int, ef: int
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Fused GEMV-mode cluster scan + top-EF."""
+    n = codes.shape[0]
+    if kernels_enabled() and n >= _KERNEL_MIN_ROWS:
+        return _k.cluster_scan(codes, f_add, lut, sumq, s1, s2, n_valid,
+                               dim=dim, ef=ef,
+                               interpret=jax.default_backend() != "tpu")
+    return _ref.cluster_scan_ref(codes, f_add, lut, sumq, s1, s2, dim, ef,
+                                 n_valid)

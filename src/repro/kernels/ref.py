@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the exact semantics the kernels must match (tests sweep shapes
+and dtypes with assert_allclose / array_equal against these).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["unpack_bits", "binary_ip_rank_ref", "cluster_scan_ref"]
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def unpack_bits(packed: jax.Array, dim: int) -> jax.Array:
+    """(..., W) uint8 -> (..., dim) int32 {0,1}, little-endian within a byte."""
+    shifts = jnp.arange(8, dtype=jnp.int32)
+    bits = (packed.astype(jnp.int32)[..., :, None] >> shifts) & 1
+    return bits.reshape(*packed.shape[:-1], packed.shape[-1] * 8)[..., :dim]
+
+
+def binary_ip_rank_ref(codes: jax.Array, f_add: jax.Array, lut: jax.Array,
+                       sumq: jax.Array, s1: jax.Array, s2: jax.Array,
+                       dim: int) -> jax.Array:
+    """O3 mulfree rank (see core/mulfree.py):
+
+        S   = <bits_i, lut>                 (additions-only LUT sum)
+        t   = 2 S - sumq
+        t'  = t + (t >> s1) [+ (t >> s2)]   (shift-add 1/alpha)
+        out = f_add_i - t'
+
+    codes (N, W) uint8, f_add (N,) i32, lut (Dpad,) i32 -> (N,) i32.
+    """
+    bits = unpack_bits(codes, dim)                       # (N, dim) i32
+    s = bits @ lut[:dim].astype(jnp.int32)               # (N,) i32
+    t = 2 * s - sumq.astype(jnp.int32)
+    t = t.astype(jnp.int32)
+    tp = t + (t >> s1) + jnp.where(s2 >= 31, 0, t >> jnp.minimum(s2, 30))
+    return f_add.astype(jnp.int32) - tp
+
+
+def cluster_scan_ref(codes: jax.Array, f_add: jax.Array, lut: jax.Array,
+                     sumq: jax.Array, s1: jax.Array, s2: jax.Array,
+                     dim: int, ef: int, n_valid: jax.Array | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Fused full-cluster scan + top-EF (ascending rank).
+
+    Returns (ids (EF,) i32, ranks (EF,) i32); invalid/pad rows rank INT_MAX.
+    Ties broken by lower node id (matches the kernel's insertion order).
+    """
+    r = binary_ip_rank_ref(codes, f_add, lut, sumq, s1, s2, dim)
+    if n_valid is not None:
+        r = jnp.where(jnp.arange(r.shape[0]) < n_valid, r, INT_MAX)
+    # tie-break on id: lexicographic (rank, id) via stable argsort
+    order = jnp.argsort(r, stable=True)
+    ids = order[:ef].astype(jnp.int32)
+    return ids, r[ids]

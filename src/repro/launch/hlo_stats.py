@@ -1,0 +1,370 @@
+"""Trip-count-aware HLO accounting.
+
+XLA's HloCostAnalysis (compiled.cost_analysis()) visits every computation
+exactly ONCE — a lax.scan over 88 layer groups reports 1/88th of the real
+FLOPs. Since every large model here scans its layer stack (deliberately:
+O(pattern) HLO size), the dry-run derives roofline terms from its own
+weighted walk of the optimized HLO:
+
+  1. split compiled.as_text() into computations, building a per-computation
+     symbol table (instruction name -> result shape) so operand shapes
+     resolve even though the printer omits inline operand types;
+  2. per computation, count dot/conv FLOPs and per-instruction bytes
+     (operands + results; fusion bodies are costed at their call site,
+     matching the HBM-traffic model of HloCostAnalysis);
+  3. build the call graph (while bodies/conds, fusions, calls); while trip
+     counts come from the backend_config "known_trip_count" (fallback: the
+     loop-condition comparand constant);
+  4. total = Σ_comp stats(comp) × Π enclosing-loop trip counts.
+
+Validated against cost_analysis on unrolled graphs (tests/test_hlo_stats.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "u2": 1, "s2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->")
+_INSTR = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPNAME = re.compile(r"^((?:\([^)]*\)|\S)+?)\s*([\w\-]+)\(")
+_ARG = re.compile(r"%([\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_INT = re.compile(r"\bconstant\((\d+)\)")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops that move no HBM bytes themselves (pointer/metadata/control):
+_FREE_OPS = frozenset({
+    "parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+    "after-all", "reshape", "while", "conditional", "call",
+    "copy-start", "copy-done", "all-reduce-done", "all-gather-done",
+    "collective-permute-done", "opt-barrier", "partition-id", "replica-id",
+    "rng-get-and-update-state",
+})
+# ops whose reads are negligible next to their writes:
+_RESULT_ONLY_OPS = frozenset({"broadcast", "iota", "rng", "rng-bit-generator"})
+
+
+def _shape_list(text: str) -> list[tuple[str, str]]:
+    return _SHAPE_RE.findall(text)
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _bytes_of(shapes: list[tuple[str, str]]) -> int:
+    return sum(_elems(dims) * _DTYPE_BYTES.get(dt, 0) for dt, dims in shapes)
+
+
+def _args_segment(rest: str) -> str:
+    """The balanced-paren argument list right after the op name."""
+    i = rest.find("(")
+    if i < 0:
+        return ""
+    depth, j = 1, i + 1
+    while j < len(rest) and depth:
+        if rest[j] == "(":
+            depth += 1
+        elif rest[j] == ")":
+            depth -= 1
+        j += 1
+    return rest[i + 1:j - 1]
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    calls: list = dataclasses.field(default_factory=list)
+    while_edges: list = dataclasses.field(default_factory=list)  # (body, cond, trips)
+    is_fusion_body: bool = False
+
+
+def _split_computations(text: str) -> tuple[dict[str, list[str]], str | None]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                if stripped.startswith("ENTRY"):
+                    entry = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        comps[cur].append(stripped)
+    return comps, entry
+
+
+def _group_info(line: str) -> tuple[int, int]:
+    """(group size g, n_groups) from replica_groups."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return max(int(m.group(2)), 1), max(int(m.group(1)), 1)
+    m = re.search(r"replica_groups=\{(.+?)\}\}", line)
+    if m:
+        groups = m.group(1)
+        first = groups.split("}", 1)[0]
+        g = first.count(",") + 1
+        ng = groups.count("{")
+        return max(g, 1), max(ng, 1)
+    return 1, 1
+
+
+def _collective_moved(op: str, line: str, res_bytes: int, arg_bytes: int
+                      ) -> float:
+    """Bytes crossing links PER DEVICE for one execution of the op.
+
+    SPMD HLO shapes are local shards and every device runs the op, so the
+    per-device ring-traffic estimates below, multiplied by chip count at
+    the roofline layer, give system bytes."""
+    g, _ = _group_info(line)
+    frac = (g - 1) / max(g, 1)
+    if op == "all-reduce":
+        return 2.0 * res_bytes * frac
+    if op == "all-gather":
+        return res_bytes * frac          # result is the gathered (local) out
+    if op == "reduce-scatter":
+        return arg_bytes * frac
+    if op == "all-to-all":
+        return res_bytes * frac
+    return res_bytes                     # collective-permute: send + recv once
+
+
+def _parse_instrs(lines: list[str]):
+    """(symbol table name->shapes, [(iname, op, rest, rtype)])."""
+    table: dict[str, list[tuple[str, str]]] = {}
+    parsed = []
+    for ln in lines:
+        m = _INSTR.match(ln)
+        if not m:
+            continue
+        iname, rest = m.group(1), m.group(2)
+        mo = _OPNAME.match(rest)
+        if not mo:
+            continue
+        rtype, op = mo.group(1), mo.group(2)
+        table[iname] = _shape_list(rtype)
+        parsed.append((iname, op, rest, rtype))
+    return table, parsed
+
+
+def _fusion_traffic(lines: list[str]) -> tuple[dict[int, float], float | None]:
+    """HBM-traffic model of a fused computation at its call site.
+
+    Returns (param_traffic, root_write_bytes):
+      param_traffic[i] — bytes actually read from parameter i. A parameter
+      consumed ONLY by dynamic-slice/gather contributes the slice sizes
+      (the scan-residual pattern: the fusion takes a whole (L, ...) stack
+      as operand but reads one layer's slice). Missing -> full param size.
+      root_write_bytes — if the fusion ROOT is a dynamic-update-slice the
+      write is 2× the update size (read-modify-write), not the full
+      aliased buffer (else None -> result size).
+    """
+    table, parsed = _parse_instrs(lines)
+    param_idx: dict[str, int] = {}
+    for iname, op, rest, _ in parsed:
+        if op == "parameter":
+            m = re.search(r"parameter\((\d+)\)", rest)
+            if m:
+                param_idx[iname] = int(m.group(1))
+    sliced: dict[str, float] = {k: 0.0 for k in param_idx}
+    for iname, op, rest, rtype in parsed:
+        if op == "parameter":
+            continue
+        args = _args_segment(rest[len(rtype):].lstrip())
+        for a in _ARG.findall(args):
+            if a in sliced:
+                if op in ("dynamic-slice", "gather"):
+                    sliced[a] += _bytes_of(table[iname])
+                else:
+                    sliced[a] = float("nan")            # full read
+    traffic = {idx: v for name, idx in param_idx.items()
+               if (v := sliced[name]) == v}             # drop NaN
+    root_write = None
+    for iname, op, rest, rtype in parsed:
+        full_line_is_root = any(
+            ln.startswith("ROOT") and f"%{iname} " in ln for ln in lines)
+        if op == "dynamic-update-slice" and full_line_is_root:
+            args = _args_segment(rest[len(rtype):].lstrip())
+            an = _ARG.findall(args)
+            if len(an) > 1:
+                root_write = 2.0 * _bytes_of(table.get(an[1], []))
+    return traffic, root_write
+
+
+def parse_hlo(text: str) -> tuple[dict[str, CompStats], str]:
+    comps_lines, entry = _split_computations(text)
+    if entry is None:
+        entry = list(comps_lines)[-1]
+
+    def _is_fusion(name):
+        return "fused" in name or name.startswith("wrapped_")
+
+    # pass 1: fusion-body call-site traffic models
+    fusion_info = {name: _fusion_traffic(lines)
+                   for name, lines in comps_lines.items() if _is_fusion(name)}
+
+    stats: dict[str, CompStats] = {}
+    for name, lines in comps_lines.items():
+        cs = CompStats(is_fusion_body=name in fusion_info)
+        table, parsed = _parse_instrs(lines)
+
+        for iname, op, rest, rtype in parsed:
+            args = _args_segment(rest[len(rtype):].lstrip())
+            arg_names = _ARG.findall(args)
+            res_shapes = table[iname]
+            res_bytes = _bytes_of(res_shapes)
+            arg_shapes: list[list[tuple[str, str]]] = [
+                table.get(a, []) for a in arg_names]
+            arg_bytes = sum(_bytes_of(s) for s in arg_shapes)
+            # HBM-traffic model per op (mirrors HloCostAnalysis):
+            if op in _FREE_OPS:
+                pass                              # pointer/metadata ops
+            elif op == "fusion":
+                mcall = re.search(r"calls=%?([\w\.\-]+)", rest)
+                ptraf, root_write = fusion_info.get(
+                    mcall.group(1) if mcall else "", ({}, None))
+                reads = sum(ptraf.get(i, _bytes_of(s))
+                            for i, s in enumerate(arg_shapes))
+                writes = root_write if root_write is not None else res_bytes
+                cs.bytes += reads + writes
+            elif op in _RESULT_ONLY_OPS:
+                cs.bytes += res_bytes             # writes, tiny reads
+            elif op == "dynamic-slice":
+                cs.bytes += 2 * res_bytes         # reads slice, writes slice
+            elif op == "dynamic-update-slice":
+                upd = _bytes_of(arg_shapes[1]) if len(arg_shapes) > 1 else 0
+                cs.bytes += 2 * upd               # in-place: r/w update only
+            elif op in ("gather", "scatter"):
+                cs.bytes += 2 * res_bytes + _bytes_of(
+                    arg_shapes[-1] if arg_shapes else [])
+            else:
+                cs.bytes += res_bytes + arg_bytes
+
+            if op == "dot":
+                lhs = arg_shapes[0] if arg_shapes else []
+                lhs_dims = [int(d) for d in lhs[0][1].split(",") if d] \
+                    if lhs else []
+                contract = 1
+                mc = _CONTRACT.search(rest)
+                if mc and lhs_dims:
+                    for i in mc.group(1).split(","):
+                        if i != "" and int(i) < len(lhs_dims):
+                            contract *= lhs_dims[int(i)]
+                res_elems = sum(_elems(d) for _, d in res_shapes)
+                cs.flops += 2.0 * max(res_elems, 1) * contract
+            elif op == "convolution":
+                k = arg_shapes[1] if len(arg_shapes) > 1 else []
+                k_elems = sum(_elems(d) for _, d in k)
+                res_elems = sum(_elems(d) for _, d in res_shapes)
+                cs.flops += 2.0 * res_elems * max(k_elems, 1) ** 0.5
+
+            base = next((o for o in _COLLECTIVES
+                         if op in (o, o + "-start")), None)
+            if base:
+                moved = _collective_moved(base, rest, res_bytes, arg_bytes)
+                cs.coll_bytes += moved
+                cs.coll_by_op[base] = cs.coll_by_op.get(base, 0.0) + moved
+            if op == "while":
+                mt = _TRIP.search(rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", rest)
+                mb = re.search(r"body=%?([\w\.\-]+)", rest)
+                if mc and mb:
+                    trips = int(mt.group(1)) if mt else None
+                    cs.while_edges.append((mb.group(1), mc.group(1), trips))
+            else:
+                mcall = re.search(
+                    r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)", rest)
+                if mcall:
+                    cs.calls.append(mcall.group(1))
+                mbr = re.search(r"branch_computations=\{([^}]*)\}", rest)
+                if mbr:
+                    cs.calls += [c.strip().lstrip("%")
+                                 for c in mbr.group(1).split(",")]
+        stats[name] = cs
+
+    # resolve missing trip counts from the condition computation's constant.
+    # Data-dependent loops (beam search) compare against BOTH an iteration
+    # cap and sentinel constants (INT_MAX padding) — take the smallest
+    # plausible bound, capped defensively.
+    for name, cs in stats.items():
+        fixed = []
+        for body, cond, trips in cs.while_edges:
+            if trips is None:
+                consts = []
+                for ln in comps_lines.get(cond, []):
+                    consts += [int(c) for c in _CONST_INT.findall(ln)]
+                cands = [c for c in consts if 1 < c < 10 ** 6]
+                trips = min(cands) if cands else 1
+            fixed.append((body, cond, trips))
+        cs.while_edges = fixed
+    return stats, entry
+
+
+@dataclasses.dataclass
+class HloTotals:
+    flops: float
+    bytes: float
+    coll_bytes: float
+    coll_by_op: dict
+    n_while: int
+
+
+def weighted_totals(text: str) -> HloTotals:
+    stats, entry = parse_hlo(text)
+    mult: dict[str, float] = defaultdict(float)
+    n_while = 0
+    seen_edges = set()
+
+    def visit(name: str, w: float):
+        nonlocal n_while
+        if name not in stats:
+            return
+        mult[name] += w
+        cs = stats[name]
+        for callee in cs.calls:
+            visit(callee, w)
+        for body, cond, trips in cs.while_edges:
+            if (name, body) not in seen_edges:
+                seen_edges.add((name, body))
+                n_while += 1
+            visit(body, w * trips)
+            visit(cond, w * (trips + 1))
+
+    visit(entry, 1.0)
+    flops = bytes_ = coll = 0.0
+    coll_by: dict[str, float] = defaultdict(float)
+    for name, w in mult.items():
+        cs = stats[name]
+        flops += cs.flops * w
+        coll += cs.coll_bytes * w
+        for k, v in cs.coll_by_op.items():
+            coll_by[k] += v * w
+        if not cs.is_fusion_body:
+            bytes_ += cs.bytes * w
+    return HloTotals(flops, bytes_, coll, dict(coll_by), n_while)

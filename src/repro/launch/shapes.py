@@ -1,0 +1,83 @@
+"""The assigned input-shape cells and per-(arch, shape) input specs.
+
+Shapes (brief):
+    train_4k     seq 4096   global_batch 256   -> train_step
+    prefill_32k  seq 32768  global_batch 32    -> prefill_step
+    decode_32k   seq 32768  global_batch 128   -> serve_step (1 new token)
+    long_500k    seq 524288 global_batch 1     -> serve_step; sub-quadratic
+                                                  archs only
+
+input_specs() returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation. Modality frontends are
+stubs: audio supplies (B, 1500, d) frame embeddings, vlm (B, 256, d) patch
+embeddings (patch positions replace the leading text positions so the total
+sequence length matches the cell).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+CELLS = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape == "long_500k" and not cfg.sub_quadratic():
+        return False, ("pure full-attention arch: 524k-token decode needs a "
+                       "full-length cache fed by an O(L^2) prefill — brief "
+                       "directs running long_500k only for sub-quadratic "
+                       "families")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """Model inputs for the cell (excluding params/cache, which come from
+    eval_shape of init/init_cache)."""
+    cell = CELLS[shape]
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        text = s - cfg.n_patches
+        d = {"tokens": _sds((b, text), jnp.int32),
+             "labels": _sds((b, text), jnp.int32)}
+        if cfg.n_frames:
+            d["frames"] = _sds((b, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+        if cfg.n_patches:
+            d["patches"] = _sds((b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        return d
+    if cell.kind == "prefill":
+        text = s - cfg.n_patches
+        d = {"tokens": _sds((b, text), jnp.int32)}
+        if cfg.n_frames:
+            d["frames"] = _sds((b, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+        if cfg.n_patches:
+            d["patches"] = _sds((b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        return d
+    # decode: one new token against a cache of seq_len (cache specs built by
+    # the dry-run from init_cache's eval_shape)
+    return {"tokens": _sds((b, 1), jnp.int32)}

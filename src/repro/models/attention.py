@@ -1,0 +1,414 @@
+"""Attention family: GQA (full / sliding-window / cross) and MLA.
+
+Memory discipline: every prefill/train path uses **blockwise online-softmax
+attention** (lax.scan over KV blocks, running (m, l, acc) statistics) so the
+(S, S) score matrix is never materialized — mandatory for the 32k-prefill
+and 4k×256 train cells, and the XLA-level analogue of a flash kernel. The
+Pallas flash kernel (kernels/flash_attn.py) is swapped in on TPU for the
+perf path; this scan is its oracle.
+
+Decode reads the cache in one pass (scores are (B, H, 1, S) — small).
+
+MLA (DeepSeek) is expressed as *latent-space attention*: cache stores only
+the compressed KV latent (+ the decoupled RoPE key), queries are absorbed
+into latent space (q @ W_uk), so attention is GQA with one KV head of width
+(kv_lora + rope); values are the latent itself, up-projected after the
+weighted sum. This is the matrix-absorption serving formulation — the whole
+point of MLA's small cache — and reuses the same blockwise kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from ..distributed.sharding import constrain
+
+NEG_INF = jnp.float32(-1e30)
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention core
+# ---------------------------------------------------------------------------
+
+def _block_mask(j, kv_block, q_pos, valid_len, causal, window):
+    kv_pos = j * kv_block + jnp.arange(kv_block)           # (kb,)
+    ok = (kv_pos[None, :] < valid_len)
+    if causal:
+        ok = ok & (kv_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        ok = ok & (q_pos[:, None] - kv_pos[None, :] < window)
+    return ok
+
+
+def _flash_fwd(q, k, v, q_offset, valid_len, causal, window, kv_block,
+               softcap):
+    """Blockwise online-softmax forward. Returns (out, lse) with
+    out (b, hkv, g, sq, dv) f32 and lse (b, hkv, g, sq) f32."""
+    b, sq, hq, dk = q.shape
+    sk, hkv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = hq // hkv
+    qf = (q.astype(jnp.float32) / math.sqrt(dk)).reshape(b, sq, hkv, g, dk)
+    nblk = k.shape[1] // kv_block
+    kb = jnp.moveaxis(k.reshape(b, nblk, kv_block, hkv, dk), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nblk, kv_block, hkv, dv), 1, 0)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, blk):
+        # the block counter j lives in the CARRY so nothing per-block is
+        # precomputable/hoistable outside the loop
+        m, l, acc, j = carry
+        kj, vj = blk
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kj.astype(jnp.float32))
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        ok = _block_mask(j, kv_block, q_pos, valid_len, causal, window)
+        s = jnp.where(ok[None, None, None], s, NEG_INF)    # (b,h,g,q,k)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vj.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc, j + 1), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF)
+    l0 = jnp.zeros((b, hkv, g, sq))
+    a0 = jnp.zeros((b, hkv, g, sq, dv))
+    (m, l, acc, _), _ = jax.lax.scan(
+        step, (m0, l0, a0, jnp.zeros((), jnp.int32)), (kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _flash(q, k, v, q_offset, valid_len, causal, window, kv_block, softcap):
+    out, _ = _flash_fwd(q, k, v, q_offset, valid_len, causal, window,
+                        kv_block, softcap)
+    return out
+
+
+def _flash_fwd_rule(q, k, v, q_offset, valid_len, causal, window, kv_block,
+                    softcap):
+    out, lse = _flash_fwd(q, k, v, q_offset, valid_len, causal, window,
+                          kv_block, softcap)
+    return out, (q, k, v, q_offset, valid_len, out, lse)
+
+
+def _flash_bwd_rule(causal, window, kv_block, softcap, res, gout):
+    """Flash backward: recompute P per block from (q, k, lse); accumulate
+    dq in the carry, emit (dk_j, dv_j) per block. O(S·d) residency — the
+    reason `attend` carries a custom_vjp at all (plain autodiff through the
+    forward scan stacks per-block score tensors: O(S²) residuals)."""
+    q, k, v, q_offset, valid_len, out, lse = res
+    b, sq, hq, dk = q.shape
+    sk, hkv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(dk)
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, g, dk)
+    nblk = sk // kv_block
+    kb = jnp.moveaxis(k.reshape(b, nblk, kv_block, hkv, dk), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nblk, kv_block, hkv, dv), 1, 0)
+    q_pos = q_offset + jnp.arange(sq)
+    go = gout.astype(jnp.float32)                          # (b,h,g,sq,dv)
+    # delta = rowsum(dout * out)
+    delta = jnp.sum(go * out, axis=-1)                     # (b,h,g,sq)
+
+    def step(carry, blk):
+        dq, j = carry
+        kj, vj = blk
+        kjf, vjf = kj.astype(jnp.float32), vj.astype(jnp.float32)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kjf)
+        if softcap:
+            t = jnp.tanh(s / softcap)
+            s_capped = t * softcap
+        else:
+            s_capped = s
+        ok = _block_mask(j, kv_block, q_pos, valid_len, causal, window)
+        s_capped = jnp.where(ok[None, None, None], s_capped, NEG_INF)
+        p = jnp.exp(s_capped - lse[..., None])             # (b,h,g,q,k)
+        dv_j = jnp.einsum("bhgqk,bhgqd->bkhd", p, go)
+        dp = jnp.einsum("bhgqd,bkhd->bhgqk", go, vjf)
+        ds = p * (dp - delta[..., None])
+        if softcap:
+            ds = ds * (1.0 - t * t)
+        ds = jnp.where(ok[None, None, None], ds, 0.0)
+        # s = (q·scale)ᵀk  ⇒  ∂s/∂q = k·scale, ∂s/∂k = q·scale (= qf)
+        dq = dq + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kjf) * scale
+        dk_j = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qf)
+        return (dq, j + 1), (dk_j, dv_j)
+
+    dq0 = jnp.zeros((b, sq, hkv, g, dk))
+    (dq, _), (dks, dvs) = jax.lax.scan(
+        step, (dq0, jnp.zeros((), jnp.int32)), (kb, vb))
+    dq = dq.reshape(b, sq, hq, dk).astype(q.dtype)
+    dk_out = jnp.moveaxis(dks, 0, 1).reshape(b, sk, hkv, dk).astype(k.dtype)
+    dv_out = jnp.moveaxis(dvs, 0, 1).reshape(b, sk, hkv, dv).astype(v.dtype)
+    return dq, dk_out, dv_out, None, None
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+           window: int | None = None, q_offset=0,
+           kv_valid_len=None, kv_block: int = 512,
+           softcap: float = 0.0) -> jax.Array:
+    """Blockwise online-softmax ("flash") attention with a custom VJP.
+
+    q (B, Sq, Hq, dk)   k (B, Sk, Hkv, dk)   v (B, Sk, Hkv, dv),
+    Hq % Hkv == 0. Returns (B, Sq, Hq, dv) in q.dtype.
+    q_offset: absolute position of q[0] (decode/chunked prefill).
+    kv_valid_len: mask keys at positions >= this (cache decode).
+    """
+    b, sq, hq, dk = q.shape
+    sk, hkv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = hq // hkv
+    kv_block = min(kv_block, sk)
+    pad = (-sk) % kv_block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+    valid_len = jnp.asarray(sk if kv_valid_len is None else kv_valid_len,
+                            jnp.int32)
+    out = _flash(q, k, v, q_offset, valid_len, causal, window, kv_block,
+                 softcap)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, hq, dv)
+    return out.astype(q.dtype)
+
+
+def attend_ref(q, k, v, *, causal, window=None, q_offset=0,
+               kv_valid_len=None, softcap: float = 0.0):
+    """Naive O(S²)-memory oracle for tests."""
+    return attend_onepass(q, k, v, causal=causal, window=window,
+                          q_offset=q_offset, kv_valid_len=kv_valid_len,
+                          softcap=softcap)
+
+
+def attend_onepass(q, k, v, *, causal, window=None, q_offset=0,
+                   kv_valid_len=None, kv_positions=None,
+                   softcap: float = 0.0):
+    """Single-pass softmax attention (decode: Sq is tiny).
+
+    kv_positions: explicit absolute position per cache slot (rolling window
+    caches); entries < 0 are masked; causal/window masking is implied by the
+    rolling-buffer invariant and skipped."""
+    b, sq, hq, dk = q.shape
+    sk, hkv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = hq // hkv
+    qf = (q.astype(jnp.float32) / math.sqrt(dk)).reshape(b, sq, hkv, g, dk)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = q_offset + jnp.arange(sq)
+    if kv_positions is not None:
+        ok = jnp.broadcast_to((kv_positions >= 0)[None, :], (sq, sk))
+    else:
+        kv_pos = jnp.arange(sk)
+        ok = jnp.ones((sq, sk), bool) if kv_valid_len is None else \
+            jnp.broadcast_to(kv_pos[None, :] < kv_valid_len, (sq, sk))
+        if causal:
+            ok = ok & (kv_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            ok = ok & (q_pos[:, None] - kv_pos[None, :] < window)
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, hq, dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array       # (B, Smax, Hkv, dk)
+    v: jax.Array       # (B, Smax, Hkv, dv)
+    pos: jax.Array     # () int32 — tokens already cached
+
+
+def gqa_init(key, cfg):
+    """Projections are stored 3-D — (d, H, hd) / (H, hd, d) — with the
+    head axis marked for 'model'. The divisibility fallback then reasons
+    about HEAD counts, not flattened columns: a flattened (d, H·hd) weight
+    whose column count happens to divide TP gets sharded mid-head, and XLA
+    must all-reduce every (S, S) score tile of the partial contraction —
+    the dominant collective in the baseline whisper/internvl/GQA cells."""
+    d, hq, hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.head_dim or d // hq
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+
+    def head_w(k, shape, spec, scale):
+        w = (jax.random.truncated_normal(k, -2, 2, shape, jnp.float32)
+             * scale).astype(cfg.dtype)
+        return w, spec
+
+    p["wq"], s["wq"] = head_w(ks[0], (d, hq, hd), P(None, L.MODEL, None),
+                              1.0 / math.sqrt(d))
+    p["wk"], s["wk"] = head_w(ks[1], (d, hkv, hd), P(None, L.MODEL, None),
+                              1.0 / math.sqrt(d))
+    p["wv"], s["wv"] = head_w(ks[2], (d, hkv, hd), P(None, L.MODEL, None),
+                              1.0 / math.sqrt(d))
+    p["wo"], s["wo"] = head_w(ks[3], (hq, hd, d), P(L.MODEL, None, None),
+                              1.0 / math.sqrt(hq * hd))
+    return p, s
+
+
+def _proj_heads(x, w):
+    y = jnp.einsum("bsd,dhk->bshk", x, w)
+    return constrain(y, L.DATA, None, L.MODEL, None)
+
+
+def gqa_apply(p, x, cfg, *, positions, cache: KVCache | None = None,
+              window=None, kv_override=None, causal: bool = True):
+    """x (B, S, d). Train/prefill when cache is None or being filled;
+    decode when S == 1 against an existing cache. kv_override: (k, v)
+    encoder memory for cross-attention (positions ignored for kv).
+
+    Window caches may be ROLLING: allocated with `window` slots, written
+    modulo window; kv slot positions are then reconstructed analytically.
+    """
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.head_dim or cfg.d_model // hq
+    b, sq, _ = x.shape
+    q = _proj_heads(x, p["wq"])
+    if kv_override is not None:
+        k, v = kv_override
+        out = attend(q, k, v, causal=False, kv_block=min(512, k.shape[1]))
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+    k = _proj_heads(x, p["wk"])
+    v = _proj_heads(x, p["wv"])
+    if cfg.rope_theta:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = attend(q, k, v, causal=causal, window=window)
+    else:
+        slots = cache.k.shape[1]
+        rolling = window is not None and slots == window
+        if rolling:
+            if sq == 1:
+                slot = cache.pos % window
+                kc = jax.lax.dynamic_update_slice(
+                    cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+                vc = jax.lax.dynamic_update_slice(
+                    cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+                cache = KVCache(kc, vc, cache.pos + 1)
+                # slot s holds absolute position pos - ((pos - s) mod W)
+                pos = cache.pos - 1
+                kv_positions = pos - (pos - jnp.arange(window)) % window
+                out = attend_onepass(q, kc, vc, causal=True,
+                                     q_offset=pos, kv_positions=kv_positions)
+            else:
+                # prefill from zero: attend over in-pass K/V, stash the tail
+                out = attend(q, k, v, causal=causal, window=window,
+                             q_offset=cache.pos)
+                take = min(window, sq)
+                idx = ((cache.pos + sq - take + jnp.arange(take)) % window)
+                kc = cache.k.at[:, idx].set(k[:, -take:].astype(cache.k.dtype))
+                vc = cache.v.at[:, idx].set(v[:, -take:].astype(cache.v.dtype))
+                cache = KVCache(kc, vc, cache.pos + sq)
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, cache.pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, cache.pos, 0, 0))
+            cache = KVCache(kc, vc, cache.pos + sq)
+            if sq == 1:
+                out = attend_onepass(q, kc, vc, causal=True, window=window,
+                                     q_offset=cache.pos - 1,
+                                     kv_valid_len=cache.pos)
+            else:
+                out = attend(q, kc, vc, causal=True, window=window,
+                             q_offset=cache.pos - sq, kv_valid_len=cache.pos)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return constrain(out, L.DATA, None, None), cache
+
+
+def gqa_empty_cache(cfg, batch: int, max_len: int, dtype):
+    hkv = cfg.n_kv_heads
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, max_len, hkv, hd), dtype)
+    return KVCache(z, z, jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V2 family), latent-space (absorbed) formulation
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg):
+    d, hq = cfg.d_model, cfg.n_heads
+    nope = cfg.head_dim or 128
+    rope = cfg.qk_rope_dim
+    lora = cfg.kv_lora_rank
+    vd = cfg.mla_v_dim
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["wq"], s["wq"] = L.dense_init(ks[0], d, hq * (nope + rope), cfg.dtype,
+                                    P(None, L.MODEL))
+    p["wdkv"], s["wdkv"] = L.dense_init(ks[1], d, lora + rope, cfg.dtype,
+                                        P(None, None))
+    p["kv_norm"], s["kv_norm"] = L.norm_init(lora, "rmsnorm")
+    p["wuk"], s["wuk"] = L.dense_init(ks[2], lora, hq * nope, cfg.dtype,
+                                      P(None, L.MODEL))
+    p["wuv"], s["wuv"] = L.dense_init(ks[3], lora, hq * vd, cfg.dtype,
+                                      P(None, L.MODEL))
+    p["wo"], s["wo"] = L.dense_init(ks[4], hq * vd, d, cfg.dtype,
+                                    P(L.MODEL, None),
+                                    scale=1.0 / math.sqrt(hq * vd))
+    return p, s
+
+
+def mla_apply(p, x, cfg, *, positions, cache: KVCache | None = None):
+    d, hq = cfg.d_model, cfg.n_heads
+    nope = cfg.head_dim or 128
+    rope, lora, vd = cfg.qk_rope_dim, cfg.kv_lora_rank, cfg.mla_v_dim
+    b, sq, _ = x.shape
+
+    q = (x @ p["wq"]).reshape(b, sq, hq, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    # absorb W_uk: q into latent space -> (B, S, H, lora)
+    wuk = p["wuk"].reshape(lora, hq, nope)
+    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32)).astype(x.dtype)
+    q_all = jnp.concatenate([q_lat, q_rope], axis=-1)      # (B,S,H,lora+rope)
+    q_all = constrain(q_all, L.DATA, None, L.MODEL, None)
+
+    ckv = x @ p["wdkv"]                                    # (B,S,lora+rope)
+    lat = L.norm_apply(p["kv_norm"], ckv[..., :lora], "rmsnorm")
+    k_rope = L.apply_rope(ckv[..., None, lora:], positions, cfg.rope_theta)
+    kv = jnp.concatenate([lat[..., None, :], k_rope], axis=-1)  # (B,S,1,lora+rope)
+    # score scale: MLA normalizes by sqrt(nope + rope), not the latent width
+    kv = kv * jnp.asarray(math.sqrt((lora + rope) / (nope + rope)), x.dtype)
+
+    if cache is None:
+        out = attend(q_all, kv, kv[..., :lora], causal=True)
+    else:
+        kc = jax.lax.dynamic_update_slice(
+            cache.k, kv.astype(cache.k.dtype), (0, cache.pos, 0, 0))
+        cache = KVCache(kc, kc, cache.pos + sq)
+        fn = attend_onepass if sq == 1 else attend
+        out = fn(q_all, kc, kc[..., :lora], causal=True,
+                 q_offset=cache.pos - sq, kv_valid_len=cache.pos)
+    # up-project values: (B,S,H,lora) x (lora, H, vd) -> (B,S,H*vd)
+    wuv = p["wuv"].reshape(lora, hq, vd)
+    o = jnp.einsum("bshl,lhv->bshv", out.astype(jnp.float32),
+                   wuv.astype(jnp.float32)).astype(x.dtype)
+    return constrain(o.reshape(b, sq, hq * vd) @ p["wo"], L.DATA, None, None), cache
+
+
+def mla_empty_cache(cfg, batch: int, max_len: int, dtype):
+    z = jnp.zeros((batch, max_len, 1, cfg.kv_lora_rank + cfg.qk_rope_dim), dtype)
+    return KVCache(z, z, jnp.zeros((), jnp.int32))

@@ -1,0 +1,191 @@
+"""Encoder-decoder stack (Whisper-large-v3 backbone).
+
+The conv/mel frontend is a STUB per the brief: ``input_specs()`` feeds
+precomputed frame embeddings (B, n_frames, d_model) directly into the
+encoder (sinusoidal positions added here). The decoder is a standard
+pre-LN transformer with causal self-attention (KV-cached), cross-attention
+to the encoder memory (cross-K/V projected once at prefill and cached),
+and a plain GeLU MLP; token/output embeddings are tied, LayerNorm, no RoPE
+(absolute sinusoidal positions, a small deviation from Whisper's learned
+decoder positions recorded in DESIGN.md).
+
+Both stacks are lax.scan'ed over stacked layer params.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as A
+from . import layers as L
+from .config import ModelConfig
+from .transformer import _stack_init, _vocab_mask
+from ..distributed.sharding import constrain
+
+
+class EncDecCache(NamedTuple):
+    self_kv: A.KVCache      # stacked (L, ...) decoder self-attention cache
+    cross_k: jax.Array      # (L, B, F, Hkv, hd)
+    cross_v: jax.Array
+
+
+def sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    """(S,) -> (S, d) transformer sinusoidal embedding."""
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[:, None].astype(jnp.float32) * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _enc_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = L.norm_init(cfg.d_model, cfg.norm)
+    p["attn"], s["attn"] = A.gqa_init(k1, cfg)
+    p["norm2"], s["norm2"] = L.norm_init(cfg.d_model, cfg.norm)
+    p["mlp"], s["mlp"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.dtype,
+                                    cfg.mlp_kind)
+    return p, s
+
+
+def _dec_block_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = L.norm_init(cfg.d_model, cfg.norm)
+    p["self"], s["self"] = A.gqa_init(k1, cfg)
+    p["norm_x"], s["norm_x"] = L.norm_init(cfg.d_model, cfg.norm)
+    p["cross"], s["cross"] = A.gqa_init(k2, cfg)
+    p["norm2"], s["norm2"] = L.norm_init(cfg.d_model, cfg.norm)
+    p["mlp"], s["mlp"] = L.mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.dtype,
+                                    cfg.mlp_kind)
+    return p, s
+
+
+def encdec_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["embed"], s["embed"] = L.embed_init(ks[0], cfg.vocab_padded,
+                                          cfg.d_model, cfg.dtype)
+    p["enc"], s["enc"] = _stack_init(lambda k: _enc_block_init(k, cfg),
+                                     ks[1], cfg.enc_layers)
+    p["enc_norm"], s["enc_norm"] = L.norm_init(cfg.d_model, cfg.norm)
+    p["dec"], s["dec"] = _stack_init(lambda k: _dec_block_init(k, cfg),
+                                     ks[2], cfg.n_layers)
+    p["dec_norm"], s["dec_norm"] = L.norm_init(cfg.d_model, cfg.norm)
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames (B, F, d_model) stub embeddings -> encoder memory (B, F, d)."""
+    b, f, _ = frames.shape
+    x = frames.astype(cfg.dtype) + \
+        sinusoid(jnp.arange(f), cfg.d_model)[None].astype(cfg.dtype)
+    x = constrain(x, L.DATA, None, None)
+    positions = jnp.arange(f)[None]
+
+    def body(xx, lp):
+        h = L.norm_apply(lp["norm1"], xx, cfg.norm)
+        y, _ = A.gqa_apply(lp["attn"], h, cfg, positions=positions,
+                           causal=False)
+        xx = xx + y
+        h = L.norm_apply(lp["norm2"], xx, cfg.norm)
+        return xx + L.mlp_apply(lp["mlp"], h, cfg.mlp_kind, cfg.act), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc"])
+    return L.norm_apply(params["enc_norm"], x, cfg.norm)
+
+
+def project_cross_kv(params, cfg: ModelConfig, memory: jax.Array):
+    """Per-decoder-layer cross K/V from the encoder memory (prefill-once)."""
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    b, f, _ = memory.shape
+
+    def body(_, lp):
+        k = jnp.einsum("bsd,dhk->bshk", memory, lp["cross"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", memory, lp["cross"]["wv"])
+        return None, (k, v)
+
+    _, (ck, cv) = jax.lax.scan(body, None, params["dec"])
+    return ck, cv           # (L, B, F, Hkv, hd)
+
+
+def decode_forward(params, cfg: ModelConfig, tokens, cache: EncDecCache | None,
+                   *, memory=None, logits_slice: int | None = None):
+    """Decoder pass. cache=None → teacher-forced training (memory required);
+    otherwise prefill/decode against the cache (cross K/V precomputed).
+
+    Returns (logits, new_cache)."""
+    b, sq = tokens.shape
+    pos0 = jnp.zeros((), jnp.int32) if cache is None else cache.self_kv.pos[0]
+    x = params["embed"][tokens] + \
+        sinusoid(pos0 + jnp.arange(sq), cfg.d_model)[None].astype(cfg.dtype)
+    x = constrain(x, L.DATA, None, None)
+    positions = (pos0 + jnp.arange(sq))[None]
+
+    if cache is None:
+        assert memory is not None
+        hkv, hd = cfg.n_kv_heads, cfg.hd
+
+        def body(xx, lp):
+            h = L.norm_apply(lp["norm1"], xx, cfg.norm)
+            y, _ = A.gqa_apply(lp["self"], h, cfg, positions=positions)
+            xx = xx + y
+            h = L.norm_apply(lp["norm_x"], xx, cfg.norm)
+            k = jnp.einsum("bsd,dhk->bshk", memory, lp["cross"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", memory, lp["cross"]["wv"])
+            y, _ = A.gqa_apply(lp["cross"], h, cfg, positions=positions,
+                               kv_override=(k, v))
+            xx = xx + y
+            h = L.norm_apply(lp["norm2"], xx, cfg.norm)
+            return xx + L.mlp_apply(lp["mlp"], h, cfg.mlp_kind, cfg.act), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["dec"])
+        new_cache = None
+    else:
+        def body(xx, scanned):
+            lp, kv, ck, cv = scanned
+            h = L.norm_apply(lp["norm1"], xx, cfg.norm)
+            y, kv2 = A.gqa_apply(lp["self"], h, cfg, positions=positions,
+                                 cache=kv)
+            xx = xx + y
+            h = L.norm_apply(lp["norm_x"], xx, cfg.norm)
+            y, _ = A.gqa_apply(lp["cross"], h, cfg, positions=positions,
+                               kv_override=(ck, cv))
+            xx = xx + y
+            h = L.norm_apply(lp["norm2"], xx, cfg.norm)
+            return xx + L.mlp_apply(lp["mlp"], h, cfg.mlp_kind, cfg.act), kv2
+
+        x, self_kv = jax.lax.scan(
+            body, x, (params["dec"], cache.self_kv, cache.cross_k,
+                      cache.cross_v))
+        new_cache = EncDecCache(self_kv, cache.cross_k, cache.cross_v)
+
+    x = L.norm_apply(params["dec_norm"], x, cfg.norm)
+    if logits_slice is not None:
+        x = x[:, -logits_slice:]
+    logits = x @ params["embed"].T
+    logits = logits + _vocab_mask(cfg).astype(logits.dtype)
+    return constrain(logits, L.DATA, None, L.MODEL), new_cache
+
+
+def encdec_empty_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    lz = cfg.n_layers
+    z = jnp.zeros((lz, batch, max_len, hkv, hd), dtype)
+    kv = A.KVCache(z, z, jnp.zeros((lz,), jnp.int32))
+    ck = jnp.zeros((lz, batch, cfg.n_frames, hkv, hd), dtype)
+    return EncDecCache(kv, ck, ck)

@@ -1,0 +1,124 @@
+"""Core NN primitives — functional, param-dict based, shard-spec aware.
+
+Every init_* returns a (params, specs) pair built from the same structure:
+``params`` holds jnp arrays, ``specs`` holds jax.sharding.PartitionSpec with
+*logical* axis names ('data', 'model', None) resolved later by
+distributed/sharding.py. Keeping specs structurally parallel to params lets
+jax.tree.map pair them for jit in_shardings in the dry-run.
+
+Dtype policy: params in cfg.dtype (bf16 by default), math in f32 where it
+matters (norms, softmax, rope), outputs cast back.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+DATA = ("pod", "data")     # batch-sharding axes (pod collapses onto data when absent)
+MODEL = "model"
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, spec: P,
+               *, scale: float | None = None):
+    """He/Glorot-ish truncated-normal linear weight + its PartitionSpec."""
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = (jax.random.truncated_normal(key, -2, 2, (d_in, d_out), jnp.float32)
+         * scale).astype(dtype)
+    return w, spec
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    w = (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+    return w, P(MODEL, None)
+
+
+def norm_init(d: int, kind: str):
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}, \
+               {"scale": P(None), "bias": P(None)}
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": P(None)}
+
+
+# ---------------------------------------------------------------------------
+# apply helpers
+# ---------------------------------------------------------------------------
+
+def norm_apply(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    """(dim//2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, hd) with interleaved-pair rotation; positions (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                              # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN): swiglu / geglu / plain 2-layer
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, dtype, kind: str):
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    if kind in ("swiglu", "geglu"):
+        p["wi"], s["wi"] = dense_init(ks[0], d, d_ff, dtype, P(None, MODEL))
+        p["wg"], s["wg"] = dense_init(ks[1], d, d_ff, dtype, P(None, MODEL))
+    else:
+        p["wi"], s["wi"] = dense_init(ks[0], d, d_ff, dtype, P(None, MODEL))
+    p["wo"], s["wo"] = dense_init(ks[2], d_ff, d, dtype, P(MODEL, None),
+                                  scale=1.0 / math.sqrt(d_ff))
+    return p, s
+
+
+def mlp_apply(p, x, kind: str, act: str):
+    f = act_fn(act)
+    if kind in ("swiglu", "geglu"):
+        a = "silu" if kind == "swiglu" else "gelu"
+        h = act_fn(a)(x @ p["wg"]) * (x @ p["wi"])
+    else:
+        h = f(x @ p["wi"])
+    return h @ p["wo"]
+
+
+def logits_softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return (jnp.tanh(x.astype(jnp.float32) / cap) * cap).astype(x.dtype)

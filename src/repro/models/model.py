@@ -1,0 +1,164 @@
+"""Model factory + train/serve step builders — the public modeling API.
+
+    model = build_model(cfg)
+    params, specs = model.init(jax.random.PRNGKey(0))
+    loss = model.loss(params, batch)
+    step = make_train_step(model, opt_cfg)      # jit-able, donatable
+    logits, cache = model.prefill(params, tokens, cache)
+    logits, cache = model.decode(params, tokens1, cache)
+
+`batch` dicts: tokens/labels (B, S) i32; audio adds frames (B, F, d);
+vlm adds patches (B, Np, d) (both modality frontends are stubs per brief).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+from .config import ModelConfig
+from ..optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- init ----------------------------------------------------------------
+    def init(self, key) -> tuple[Any, Any]:
+        if self.cfg.enc_layers:
+            return encdec.encdec_init(key, self.cfg)
+        return transformer.decoder_init(key, self.cfg)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        """max_len counts *text* tokens; vlm patch slots are added here."""
+        max_len = max_len + self.cfg.n_patches
+        if self.cfg.enc_layers:
+            return encdec.encdec_empty_cache(self.cfg, batch, max_len, dtype)
+        return transformer.decoder_empty_cache(self.cfg, batch, max_len, dtype)
+
+    # -- forward -------------------------------------------------------------
+    def forward(self, params, batch: dict):
+        """Teacher-forced full-sequence logits (training)."""
+        cfg = self.cfg
+        if cfg.enc_layers:
+            memory = encdec.encode(params, cfg, batch["frames"])
+            logits, _ = encdec.decode_forward(params, cfg, batch["tokens"],
+                                              None, memory=memory)
+            return logits, jnp.zeros((), jnp.float32)
+        logits, _, aux = transformer.decoder_forward(
+            params, cfg, batch["tokens"], patches=batch.get("patches"))
+        return logits, aux
+
+    def loss(self, params, batch: dict):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        if cfg.n_patches:                      # vlm: text logits only
+            logits = logits[:, cfg.n_patches:]
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), labels[..., None].astype(jnp.int32),
+            axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        ce = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return ce + cfg.router_aux_coef * aux, {"ce": ce, "aux": aux}
+
+    # -- serving -------------------------------------------------------------
+    def prefill(self, params, tokens, cache, *, frames=None, patches=None):
+        cfg = self.cfg
+        if cfg.enc_layers:
+            memory = encdec.encode(params, cfg, frames)
+            ck, cv = encdec.project_cross_kv(params, cfg, memory)
+            cache = encdec.EncDecCache(cache.self_kv, ck.astype(cache.cross_k.dtype),
+                                       cv.astype(cache.cross_v.dtype))
+            return encdec.decode_forward(params, cfg, tokens, cache,
+                                         logits_slice=1)
+        logits, cache, _ = transformer.decoder_forward(
+            params, cfg, tokens, cache=cache, patches=patches, logits_slice=1)
+        return logits, cache
+
+    def decode(self, params, tokens, cache):
+        """One decode step; tokens (B, 1)."""
+        cfg = self.cfg
+        if cfg.enc_layers:
+            return encdec.decode_forward(params, cfg, tokens, cache,
+                                         logits_slice=1)
+        logits, cache, _ = transformer.decoder_forward(
+            params, cfg, tokens, cache=cache, logits_slice=1)
+        return logits, cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# step builders (pure functions of (params, opt_state, batch) — jit outside)
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig
+                    ) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    cfg.accum_steps > 1 runs microbatched gradient accumulation via
+    lax.scan (live activation memory / accum_steps)."""
+    accum = model.cfg.accum_steps
+
+    def loss_fn(params, batch):
+        loss, parts = model.loss(params, batch)
+        return loss, parts
+
+    def train_step(params, opt_state, batch):
+        if accum <= 1:
+            (loss, parts), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, gacc, g), lacc + l), None
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros(())), micro_batches)
+            grads = jax.tree.map(lambda g: (g / accum).astype(jnp.float32), gsum)
+            loss = lsum / accum
+            parts = {"ce": loss, "aux": jnp.zeros(())}
+        params, opt_state, om = adamw.update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **parts, **om}
+
+    return train_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    """serve_step(params, cache, tokens) -> (next_token_logits, cache) —
+    the function the decode_* dry-run cells lower."""
+
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode(params, tokens, cache)
+        return logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, cache, tokens, frames=None, patches=None):
+        kw = {}
+        if model.cfg.enc_layers:
+            kw["frames"] = frames
+        if model.cfg.n_patches:
+            kw["patches"] = patches
+        logits, cache = model.prefill(params, tokens, cache, **kw)
+        return logits, cache
+
+    return prefill_step

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts FFN: top-k routing, sort-based capacity dispatch.
+
+Dispatch is *per batch row* and one-hot-free: routed (token, expert-choice)
+pairs are argsorted by expert id, positions within each expert come from a
+searchsorted rank trick, and tokens scatter into a static (E, C, d) capacity
+buffer — no (T, E, C) dispatch tensor is ever built, so compiled FLOPs stay
+proportional to *active* parameters (the roofline MODEL_FLOPS/HLO_FLOPs
+ratio stays honest).
+
+Sharding: tokens/buffers carry the batch ('data') axis; expert weights are
+expert-sliced over 'model' (each chip holds a d_ff slice of EVERY expert —
+Megatron-style TP inside each expert). This avoids all-to-all on the
+dispatch path entirely; the alternative expert-parallel layout (experts over
+'model', all-to-all dispatch) is discussed in DESIGN.md §5 and is a perf-
+iteration knob.
+
+Aux loss: Switch-style load-balance loss, returned for the train loop.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from ..distributed.sharding import constrain
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p, s = {}, {}
+    p["router"] = (jax.random.normal(ks[0], (d, e), jnp.float32) * 0.02)
+    s["router"] = P(None, None)
+    init = jax.nn.initializers.truncated_normal(1.0 / math.sqrt(d))
+    p["wi"] = init(ks[1], (e, d, f), jnp.float32).astype(cfg.dtype)
+    p["wg"] = init(ks[2], (e, d, f), jnp.float32).astype(cfg.dtype)
+    p["wo"] = (jax.nn.initializers.truncated_normal(1.0 / math.sqrt(f))(
+        ks[3], (e, f, d), jnp.float32)).astype(cfg.dtype)
+    s["wi"] = P(None, None, L.MODEL)
+    s["wg"] = P(None, None, L.MODEL)
+    s["wo"] = P(None, L.MODEL, None)
+    if cfg.n_shared_experts:
+        p["shared"], s["shared"] = L.mlp_init(
+            ks[4], d, cfg.n_shared_experts * (cfg.moe_d_ff or cfg.d_ff),
+            cfg.dtype, cfg.mlp_kind)
+    return p, s
+
+
+def _route_row(gates_topk_idx: jax.Array, k: int, capacity: int, n_experts: int):
+    """One batch row. gates_topk_idx (S, k) -> (dest (S*k,), order info).
+
+    dest[i] = expert*C + slot for routed copy i (flattened (S, k)), or
+    E*C (dropped) when the expert's capacity is exceeded.
+    """
+    sk = gates_topk_idx.size
+    flat_e = gates_topk_idx.reshape(sk)
+    order = jnp.argsort(flat_e, stable=True)               # token-prio within expert
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(n_experts), side="left")
+    slot = jnp.arange(sk) - first[sorted_e]                # rank within expert
+    ok = slot < capacity
+    dest_sorted = jnp.where(ok, sorted_e * capacity + slot,
+                            n_experts * capacity)
+    # scatter back to flat routed order
+    dest = jnp.zeros((sk,), jnp.int32).at[order].set(dest_sorted.astype(jnp.int32))
+    return dest
+
+
+def moe_apply(p, x, cfg):
+    """x (B, S, d) -> (out (B, S, d), aux_loss ())."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_active
+    f = cfg.moe_d_ff or cfg.d_ff
+    cap = int(math.ceil(s * k / e * cfg.capacity_factor))
+
+    logits = x.astype(jnp.float32) @ p["router"]           # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                 # (B,S,k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * sum_e (frac tokens to e) * (mean prob of e)
+    frac = jnp.mean(jax.nn.one_hot(top_i[..., 0], e, dtype=jnp.float32),
+                    axis=(0, 1))
+    aux = e * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+
+    dest = jax.vmap(lambda ti: _route_row(ti, k, cap, e))(top_i)   # (B, S*k)
+
+    # scatter tokens into (B, E*C, d) capacity buffers (extra row = drop sink)
+    xk = jnp.repeat(x, k, axis=1)                          # (B, S*k, d)
+    buf = jnp.zeros((b, e * cap + 1, d), x.dtype)
+    buf = jax.vmap(lambda bf, dd, xx: bf.at[dd].set(xx))(buf, dest, xk)
+    buf = buf[:, :-1].reshape(b, e, cap, d)
+    buf = constrain(buf, L.DATA, None, None, None)
+
+    # expert FFN (expert-sliced TP over 'model' on f)
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"])
+    g = jnp.einsum("becd,edf->becf", buf, p["wg"])
+    act = "silu" if cfg.mlp_kind == "swiglu" else "gelu"
+    h = L.act_fn(act)(g) * h
+    h = constrain(h, L.DATA, None, None, L.MODEL)
+    eo = jnp.einsum("becf,efd->becd", h, p["wo"])          # (B,E,C,d)
+
+    # gather back + weighted combine over the k choices
+    eo_flat = jnp.concatenate(
+        [eo.reshape(b, e * cap, d), jnp.zeros((b, 1, d), eo.dtype)], axis=1)
+    routed = jax.vmap(lambda ef, dd: ef[dd])(eo_flat, dest)  # (B, S*k, d)
+    routed = routed.reshape(b, s, k, d)
+    out = jnp.einsum("bskd,bsk->bsd", routed.astype(jnp.float32),
+                     top_p).astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        out = out + L.mlp_apply(p["shared"], x, cfg.mlp_kind,
+                                "silu" if cfg.mlp_kind == "swiglu" else "gelu")
+    return constrain(out, L.DATA, None, None), aux

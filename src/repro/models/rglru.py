@@ -1,0 +1,142 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Per-channel gated linear recurrence:
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is linear in h, so prefill/train runs as a
+jax.lax.associative_scan over the sequence (log-depth, parallel), and decode
+is a single fused update — O(1) state, which is why recurrentgemma runs the
+long_500k cell. Channels are embarrassingly parallel → sharded over 'model'.
+
+The surrounding block is Griffin's recurrent block: two input projections
+(gate branch: GeLU; recurrent branch: causal conv1d(4) then RG-LRU),
+elementwise product, output projection.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from ..distributed.sharding import constrain
+
+_C = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array        # (B, W_rnn) f32 recurrent state
+    conv: jax.Array     # (B, conv_width-1, W_rnn)
+    pos: jax.Array
+
+
+def rglru_init(key, cfg):
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["wy"], s["wy"] = L.dense_init(ks[0], d, w, cfg.dtype, P(None, L.MODEL))
+    p["wx"], s["wx"] = L.dense_init(ks[1], d, w, cfg.dtype, P(None, L.MODEL))
+    p["conv_w"] = (jax.random.normal(ks[2], (cfg.conv_width, w), jnp.float32)
+                   / math.sqrt(cfg.conv_width)).astype(cfg.dtype)
+    s["conv_w"] = P(None, L.MODEL)
+    p["conv_b"] = jnp.zeros((w,), cfg.dtype)
+    s["conv_b"] = P(L.MODEL)
+    p["wa"], s["wa"] = L.dense_init(ks[3], w, w, cfg.dtype, P(None, L.MODEL))
+    p["ba"] = jnp.zeros((w,), jnp.float32); s["ba"] = P(L.MODEL)
+    p["wi"], s["wi"] = L.dense_init(ks[4], w, w, cfg.dtype, P(None, L.MODEL))
+    p["bi"] = jnp.zeros((w,), jnp.float32); s["bi"] = P(L.MODEL)
+    # Lambda init so that a^c in [0.9, 0.999] at r=1 (paper App. A)
+    u = jax.random.uniform(ks[5], (w,), minval=0.9, maxval=0.999)
+    p["lam"] = jnp.log(jnp.expm1(-jnp.log(u) / _C))      # softplus^-1(-ln u / c)
+    s["lam"] = P(L.MODEL)
+    p["wo"], s["wo"] = L.dense_init(ks[0], w, d, cfg.dtype, P(L.MODEL, None),
+                                    scale=1.0 / math.sqrt(w))
+    return p, s
+
+
+def _gates(p, u):
+    """u (B, S, W) conv output -> (log_a, gated_input) both f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(uf @ p["wi"].astype(jnp.float32) + p["bi"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (B,S,W) < 0
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return log_a, beta * (i * uf)
+
+
+def _conv(u, w, b):
+    width = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(width):
+        out = out + pad[:, i:i + u.shape[1]].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(u.dtype)
+
+
+def rglru_apply(p, x, cfg, *, cache: RGLRUCache | None = None):
+    """x (B, S, d_model) -> (B, S, d_model)."""
+    b, s, _ = x.shape
+    if cache is not None and s == 1:
+        return rglru_decode(p, x, cfg, cache)
+    y = jax.nn.gelu(x @ p["wy"])                          # gate branch
+    u = x @ p["wx"]
+    u = _conv(u, p["conv_w"], p["conv_b"])
+    u = constrain(u, L.DATA, None, L.MODEL)
+    log_a, gi = _gates(p, u)
+
+    if cache is not None:
+        # seed the scan with the cached state as a virtual step 0
+        log_a = jnp.concatenate([jnp.zeros_like(log_a[:, :1]), log_a], axis=1)
+        gi = jnp.concatenate([cache.h.astype(jnp.float32)[:, None], gi], axis=1)
+
+    def combine(ea, eb):
+        a1, b1 = ea
+        a2, b2 = eb
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, gi), axis=1)
+    if cache is not None:
+        h = h[:, 1:]
+    out = constrain((h.astype(x.dtype) * y) @ p["wo"], L.DATA, None, None)
+    if cache is None:
+        return out, None
+    new_conv = (x @ p["wx"])[:, -(cfg.conv_width - 1):]
+    if s < cfg.conv_width - 1:
+        new_conv = jnp.concatenate(
+            [cache.conv[:, s:], new_conv], axis=1)
+    return out, RGLRUCache(h[:, -1].astype(cache.h.dtype),
+                           new_conv.astype(cache.conv.dtype), cache.pos + s)
+
+
+def rglru_decode(p, x, cfg, cache: RGLRUCache):
+    b = x.shape[0]
+    y = jax.nn.gelu(x @ p["wy"])                          # (B,1,W)
+    u_new = x @ p["wx"]                                   # (B,1,W)
+    hist = jnp.concatenate([cache.conv, u_new], axis=1)   # (B,W_c,W)
+    w = p["conv_w"].astype(jnp.float32)
+    u = (jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32), w)
+         + p["conv_b"].astype(jnp.float32))[:, None].astype(x.dtype)
+    log_a, gi = _gates(p, u)                              # (B,1,W)
+    h = jnp.exp(log_a[:, 0]) * cache.h.astype(jnp.float32) + gi[:, 0]
+    out = constrain((h[:, None].astype(x.dtype) * y) @ p["wo"],
+                    L.DATA, None, None)
+    return out, RGLRUCache(h.astype(cache.h.dtype),
+                           hist[:, 1:].astype(cache.conv.dtype),
+                           cache.pos + 1)
+
+
+def rglru_empty_cache(cfg, batch: int, dtype):
+    w = cfg.rnn_width or cfg.d_model
+    return RGLRUCache(h=jnp.zeros((batch, w), jnp.float32),
+                      conv=jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+                      pos=jnp.zeros((), jnp.int32))

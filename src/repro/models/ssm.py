@@ -1,0 +1,214 @@
+"""Mamba2 — SSD (state-space duality) blocks, chunked scan + O(1) decode.
+
+The SSD recurrence per head (state N = cfg.ssm_state, head dim P):
+
+    h_t = exp(a_t) h_{t-1} + dt_t * (B_t ⊗ x_t),   a_t = -exp(A_log) dt_t
+    y_t = C_t · h_t + D x_t
+
+Train/prefill uses the chunked dual form (arXiv:2405.21060 §6): the sequence
+is split into chunks of Q tokens; within a chunk the quadratic "attention"
+form runs on the MXU, across chunks a lax.scan carries the (H, N, P) state.
+The (Q, Q) decay mask is materialized per (batch, chunk, head) — heads are
+sharded over 'model', bounding the f32 working set.
+
+Decode is the pure recurrence: one state update per token, no history —
+which is why the long_500k cell runs for this family.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from ..distributed.sharding import constrain
+
+NEG_INF = jnp.float32(-1e30)
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array      # (B, H, N, P) f32
+    conv: jax.Array       # (B, W-1, conv_channels) — conv lookback window
+    pos: jax.Array        # () int32
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    pdim = cfg.ssm_head_dim
+    nheads = d_inner // pdim
+    return d_inner, pdim, nheads
+
+
+def ssd_init(key, cfg):
+    d = cfg.d_model
+    d_inner, pdim, nheads = _dims(cfg)
+    n = cfg.ssm_state
+    conv_ch = d_inner + 2 * n                     # x, B, C go through the conv
+    ks = jax.random.split(key, 5)
+    p, s = {}, {}
+    d_in_proj = 2 * d_inner + 2 * n + nheads      # z, x, B, C, dt
+    p["in_proj"], s["in_proj"] = L.dense_init(ks[0], d, d_in_proj, cfg.dtype,
+                                              P(None, L.MODEL))
+    p["conv_w"] = (jax.random.normal(ks[1], (cfg.conv_width, conv_ch),
+                                     jnp.float32) / math.sqrt(cfg.conv_width)
+                   ).astype(cfg.dtype)
+    s["conv_w"] = P(None, L.MODEL)
+    p["conv_b"] = jnp.zeros((conv_ch,), cfg.dtype)
+    s["conv_b"] = P(L.MODEL)
+    # S4D-real style init: A in [1, 16), dt bias log-uniform [1e-3, 1e-1]
+    p["A_log"] = jnp.log(1.0 + 15.0 * jax.random.uniform(ks[2], (nheads,)))
+    s["A_log"] = P(L.MODEL)
+    p["dt_bias"] = jnp.log(jnp.exp(
+        10 ** jax.random.uniform(ks[3], (nheads,), minval=-3., maxval=-1.)) - 1.)
+    s["dt_bias"] = P(L.MODEL)
+    p["D"] = jnp.ones((nheads,), jnp.float32)
+    s["D"] = P(L.MODEL)
+    p["gate_norm"], s["gate_norm"] = L.norm_init(d_inner, "rmsnorm")
+    s["gate_norm"] = {"scale": P(L.MODEL)}
+    p["out_proj"], s["out_proj"] = L.dense_init(
+        ks[4], d_inner, d, cfg.dtype, P(L.MODEL, None),
+        scale=1.0 / math.sqrt(d_inner))
+    return p, s
+
+
+def _split_proj(zxbcdt, cfg):
+    d_inner, pdim, nheads = _dims(cfg)
+    n = cfg.ssm_state
+    z, xs, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    return z, xs, bmat, cmat, dt
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d: u (B, S, C), w (W, C) -> (B, S, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(width):                         # width=4: unrolled taps
+        out = out + pad[:, i:i + u.shape[1]].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(u.dtype)
+
+
+def _gated_out(p, y, z, cfg):
+    d_inner, _, _ = _dims(cfg)
+    y = L.norm_apply(p["gate_norm"], (y * jax.nn.silu(z.astype(jnp.float32))
+                                      ).astype(y.dtype), "rmsnorm")
+    return constrain(y.astype(p["out_proj"].dtype) @ p["out_proj"],
+                     L.DATA, None, None)
+
+
+def ssd_apply(p, x, cfg, *, cache: SSMCache | None = None):
+    """x (B, S, d_model) -> (B, S, d_model). Chunked SSD; cache unused
+    unless this is a 1-token decode step (see ssd_decode)."""
+    if cache is not None and x.shape[1] == 1:
+        return ssd_decode(p, x, cfg, cache)
+    b, s, _ = x.shape
+    d_inner, pdim, nheads = _dims(cfg)
+    n = cfg.ssm_state
+    z, xs, bmat, cmat, dt = _split_proj(x @ p["in_proj"], cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    xh = xs.reshape(b, s, nheads, pdim)
+    xh = constrain(xh, L.DATA, None, L.MODEL, None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,S,H)
+
+    # pad to a chunk multiple; dt=0 at pads -> a=0 (identity decay) and zero
+    # state contribution, so padding is exactly inert
+    q = min(cfg.chunk, s)
+    s_pad = (-s) % q
+    s_true = s
+    if s_pad:
+        pad2 = lambda t: jnp.pad(t, ((0, 0), (0, s_pad)) + ((0, 0),) * (t.ndim - 2))
+        xh, dt = pad2(xh), pad2(dt)
+        bmat, cmat = pad2(bmat), pad2(cmat)
+        s = s + s_pad
+    a = -jnp.exp(p["A_log"]) * dt                                    # (B,S,H)
+    nc = s // q
+    ach = a.reshape(b, nc, q, nheads)
+    cum = jnp.cumsum(ach, axis=2)                                    # (B,nc,Q,H)
+    xc = xh.reshape(b, nc, q, nheads, pdim).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, nheads)
+    bc = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+
+    # --- intra-chunk (quadratic/dual form) ---
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]              # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.exp(jnp.where(mask[None, None, :, :, None], seg, NEG_INF))
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)                       # (B,nc,Q,Q)
+    w = cb[..., None] * lmat * dtc[:, :, None, :, :]                 # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+
+    # --- chunk boundary states ---
+    decay_last = jnp.exp(cum[:, :, -1:, :] - cum)                    # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", decay_last * dtc, bc, xc)
+    a_total = cum[:, :, -1, :]                                       # (B,nc,H)
+
+    # --- inter-chunk recurrence ---
+    init = jnp.zeros((b, nheads, n, pdim)) if cache is None \
+        else cache.state.astype(jnp.float32)
+
+    def step(st, inp):
+        sc, at = inp                                  # (B,H,N,P), (B,H)
+        new = jnp.exp(at)[..., None, None] * st + sc
+        return new, st                                # emit state BEFORE chunk
+
+    final_state, s_prev = jax.lax.scan(
+        step, init, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(a_total, 1, 0)))
+    s_prev = jnp.moveaxis(s_prev, 0, 1)                              # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", cc, s_prev, jnp.exp(cum))
+
+    y = (y_intra + y_inter).reshape(b, s, nheads, pdim) \
+        + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner)[:, :s_true]
+    out = _gated_out(p, y, z, cfg)
+    if cache is None:
+        return out, None
+    new_conv = conv_in[:, -(cfg.conv_width - 1):].astype(cache.conv.dtype)
+    return out, SSMCache(final_state.astype(cache.state.dtype), new_conv,
+                         cache.pos + s)
+
+
+def ssd_decode(p, x, cfg, cache: SSMCache):
+    """Single-token recurrence. x (B, 1, d_model)."""
+    b = x.shape[0]
+    d_inner, pdim, nheads = _dims(cfg)
+    n = cfg.ssm_state
+    z, xs, bmat, cmat, dt = _split_proj(x @ p["in_proj"], cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)             # (B,1,C)
+    hist = jnp.concatenate([cache.conv, conv_in], axis=1)            # (B,W,C)
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32), w)
+        + p["conv_b"].astype(jnp.float32))[:, None].astype(x.dtype)
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    xh = xs.reshape(b, nheads, pdim).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt1)                          # (B,H)
+    bx = jnp.einsum("bn,bhp->bhnp", bmat[:, 0].astype(jnp.float32), xh)
+    state = a[..., None, None] * cache.state.astype(jnp.float32) \
+        + dt1[..., None, None] * bx
+    y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32), state) \
+        + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, d_inner)
+    out = _gated_out(p, y, z, cfg)
+    return out, SSMCache(state.astype(cache.state.dtype),
+                         hist[:, 1:].astype(cache.conv.dtype), cache.pos + 1)
+
+
+def ssm_empty_cache(cfg, batch: int, dtype):
+    d_inner, pdim, nheads = _dims(cfg)
+    conv_ch = d_inner + 2 * cfg.ssm_state
+    return SSMCache(
+        state=jnp.zeros((batch, nheads, cfg.ssm_state, pdim), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        pos=jnp.zeros((), jnp.int32))

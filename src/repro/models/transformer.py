@@ -1,0 +1,298 @@
+"""Decoder-only LM: embedding, mixer/MLP blocks, scanned layer stacks.
+
+Layer stacking: the per-layer mixer is cfg.pattern[i % len(pattern)]
+(hybrids like RecurrentGemma repeat ("rglru","rglru","lattn")). Layers are
+grouped into repeating pattern units and the unit is lax.scan'ed over
+stacked parameters — compile time and HLO size stay O(pattern) instead of
+O(n_layers), essential for the 88-layer dry-run cells. Non-uniform heads
+(first_k_dense MoE warm-up layers) and the pattern remainder run unscanned.
+
+Caches mirror the param structure: {"prefix": [...], "groups": (slot0
+stacked over n_groups, ...), "tail": [...]}.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as A
+from . import layers as L
+from . import moe as M
+from . import rglru as R
+from . import ssm as S
+from .config import ModelConfig
+from ..distributed.sharding import constrain
+
+ATTN_KINDS = ("attn", "swa", "lattn", "mla")
+
+
+# ---------------------------------------------------------------------------
+# one block
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, mixer: str, mlp: str):
+    k1, k2 = jax.random.split(key)
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = L.norm_init(cfg.d_model, cfg.norm)
+    if mixer == "mla":
+        p["mixer"], s["mixer"] = A.mla_init(k1, cfg)
+    elif mixer in ("attn", "swa", "lattn"):
+        p["mixer"], s["mixer"] = A.gqa_init(k1, cfg)
+    elif mixer == "mamba":
+        p["mixer"], s["mixer"] = S.ssd_init(k1, cfg)
+    elif mixer == "rglru":
+        p["mixer"], s["mixer"] = R.rglru_init(k1, cfg)
+    else:
+        raise ValueError(mixer)
+    if mlp == "dense":
+        p["norm2"], s["norm2"] = L.norm_init(cfg.d_model, cfg.norm)
+        p["mlp"], s["mlp"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.dtype,
+                                        cfg.mlp_kind)
+    elif mlp == "moe":
+        p["norm2"], s["norm2"] = L.norm_init(cfg.d_model, cfg.norm)
+        p["moe"], s["moe"] = M.moe_init(k2, cfg)
+    return p, s
+
+
+def block_apply(p, x, cfg: ModelConfig, mixer: str, mlp: str, *,
+                positions, cache=None):
+    """Returns (x, new_cache, aux_loss)."""
+    h = L.norm_apply(p["norm1"], x, cfg.norm)
+    if mixer == "mla":
+        y, cache = A.mla_apply(p["mixer"], h, cfg, positions=positions,
+                               cache=cache)
+    elif mixer in ("attn", "swa", "lattn"):
+        win = cfg.window if mixer in ("swa", "lattn") else None
+        y, cache = A.gqa_apply(p["mixer"], h, cfg, positions=positions,
+                               cache=cache, window=win)
+    elif mixer == "mamba":
+        y, cache = S.ssd_apply(p["mixer"], h, cfg, cache=cache)
+    else:
+        y, cache = R.rglru_apply(p["mixer"], h, cfg, cache=cache)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if mlp == "dense":
+        h = L.norm_apply(p["norm2"], x, cfg.norm)
+        act = "silu" if cfg.mlp_kind == "swiglu" else "gelu"
+        x = x + L.mlp_apply(p["mlp"], h, cfg.mlp_kind, act)
+    elif mlp == "moe":
+        h = L.norm_apply(p["norm2"], x, cfg.norm)
+        y, aux = M.moe_apply(p["moe"], h, cfg)
+        x = x + y
+    return x, cache, aux
+
+
+def block_empty_cache(cfg: ModelConfig, mixer: str, batch: int, max_len: int,
+                      dtype):
+    if mixer == "mla":
+        return A.mla_empty_cache(cfg, batch, max_len, dtype)
+    if mixer in ("attn", "swa", "lattn"):
+        # window-bounded mixers only ever read the trailing `window` slots
+        ln = max_len if cfg.window is None or mixer == "attn" \
+            else min(max_len, cfg.window)
+        return A.gqa_empty_cache(cfg, batch, ln, dtype)
+    if mixer == "mamba":
+        return S.ssm_empty_cache(cfg, batch, dtype)
+    return R.rglru_empty_cache(cfg, batch, dtype)
+
+
+# ---------------------------------------------------------------------------
+# stacked init
+# ---------------------------------------------------------------------------
+
+def _stack_init(fn, key, n: int):
+    """vmap a params-producing init over n keys; lift specs with leading None."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: fn(k)[0])(keys)
+    specs = fn(key)[1]
+    lifted = jax.tree.map(lambda s: P(None, *s), specs,
+                          is_leaf=lambda x: isinstance(x, P))
+    return params, lifted
+
+
+def decoder_init(key, cfg: ModelConfig):
+    n_pre, n_groups, n_tail = cfg.layer_plan()
+    plen = len(cfg.pattern)
+    keys = jax.random.split(key, 8)
+    p: dict[str, Any] = {}
+    s: dict[str, Any] = {}
+    p["embed"], s["embed"] = L.embed_init(keys[0], cfg.vocab_padded,
+                                          cfg.d_model, cfg.dtype)
+    p["final_norm"], s["final_norm"] = L.norm_init(cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings:
+        p["lm_head"], s["lm_head"] = L.dense_init(
+            keys[1], cfg.d_model, cfg.vocab_padded, cfg.dtype, P(None, L.MODEL))
+    if cfg.n_patches:
+        p["patch_proj"], s["patch_proj"] = L.dense_init(
+            keys[2], cfg.d_model, cfg.d_model, cfg.dtype, P(None, None))
+
+    p["prefix"], s["prefix"] = [], []
+    for i in range(n_pre):
+        bp, bs = block_init(jax.random.fold_in(keys[3], i), cfg,
+                            cfg.mixer_of(i), cfg.mlp_of(i))
+        p["prefix"].append(bp); s["prefix"].append(bs)
+
+    p["groups"], s["groups"] = [], []
+    for j in range(plen):
+        li = n_pre + j
+        if n_groups > 0:
+            bp, bs = _stack_init(
+                lambda k, li=li: block_init(k, cfg, cfg.mixer_of(li),
+                                            cfg.mlp_of(li)),
+                jax.random.fold_in(keys[4], j), n_groups)
+        else:
+            bp, bs = None, None
+        p["groups"].append(bp); s["groups"].append(bs)
+
+    p["tail"], s["tail"] = [], []
+    for t in range(n_tail):
+        li = n_pre + n_groups * plen + t
+        bp, bs = block_init(jax.random.fold_in(keys[5], t), cfg,
+                            cfg.mixer_of(li), cfg.mlp_of(li))
+        p["tail"].append(bp); s["tail"].append(bs)
+    return p, s
+
+
+def decoder_empty_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    n_pre, n_groups, n_tail = cfg.layer_plan()
+    plen = len(cfg.pattern)
+
+    def one(mixer):
+        return block_empty_cache(cfg, mixer, batch, max_len, dtype)
+
+    def stack(mixer, n):
+        c = one(mixer)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n, *a.shape)) if a.ndim else
+            jnp.zeros((n,), a.dtype), c)
+
+    cache = {
+        "prefix": [one(cfg.mixer_of(i)) for i in range(n_pre)],
+        "groups": [stack(cfg.mixer_of(n_pre + j), n_groups) if n_groups else None
+                   for j in range(plen)],
+        "tail": [one(cfg.mixer_of(n_pre + n_groups * plen + t))
+                 for t in range(n_tail)],
+    }
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _vocab_mask(cfg) -> jax.Array:
+    """(Vpad,) additive mask: -inf on padding columns."""
+    v = jnp.arange(cfg.vocab_padded)
+    return jnp.where(v < cfg.vocab_size, 0.0, -1e30).astype(jnp.float32)
+
+
+def decoder_forward(params, cfg: ModelConfig, tokens, *, cache=None,
+                    patches=None, logits_slice: int | None = None):
+    """tokens (B, S) int32. cache=None → train forward (full logits).
+    With cache → prefill/decode; logits for the last `logits_slice` tokens
+    (default: all for train, 1 for cached paths).
+
+    Returns (logits, new_cache, aux_loss_sum).
+    """
+    n_pre, n_groups, n_tail = cfg.layer_plan()
+    plen = len(cfg.pattern)
+    b, s_tok = tokens.shape
+    if cfg.n_patches and patches is not None:      # prefill/train: prepend patches
+        tx = params["embed"][tokens]
+        px = (patches.astype(cfg.dtype) @ params["patch_proj"])
+        x = jnp.concatenate([px, tx], axis=1)
+    else:
+        assert not (cfg.n_patches and cache is None), \
+            "vlm arch needs patch embeddings for training"
+        x = params["embed"][tokens]
+    x = constrain(x, L.DATA, None, None)
+    seq = x.shape[1]
+    pos0 = jnp.zeros((), jnp.int32) if cache is None else _cache_pos(cache)
+    positions = (pos0 + jnp.arange(seq))[None, :]          # (1, S)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache = {"prefix": [], "groups": [], "tail": []} if cache is not None \
+        else None
+
+    def seq_constrain(xx):
+        # Megatron-SP: the residual stream (and the per-layer remat carry)
+        # lives S-sharded over 'model'; attention/FFN gather transiently.
+        if cfg.seq_shard:
+            return constrain(xx, L.DATA, L.MODEL, None)
+        return xx
+
+    x = seq_constrain(x)
+
+    def run_block(p, xx, mixer, mlp, c):
+        xx, c2, aux = block_apply(p, xx, cfg, mixer, mlp,
+                                  positions=positions, cache=c)
+        return seq_constrain(xx), c2, aux
+
+    for i in range(n_pre):
+        c = cache["prefix"][i] if cache is not None else None
+        x, c2, aux = run_block(params["prefix"][i], x, cfg.mixer_of(i),
+                               cfg.mlp_of(i), c)
+        aux_total += aux
+        if cache is not None:
+            new_cache["prefix"].append(c2)
+
+    if n_groups > 0:
+        mixers = [cfg.mixer_of(n_pre + j) for j in range(plen)]
+        mlps = [cfg.mlp_of(n_pre + j) for j in range(plen)]
+
+        def group_body(carry, xs):
+            xx, aux_acc = carry
+            slot_params, slot_caches = xs
+            outs = []
+            for j in range(plen):
+                c = slot_caches[j] if slot_caches is not None else None
+                xx, c2, aux = run_block(slot_params[j], xx, mixers[j],
+                                        mlps[j], c)
+                aux_acc = aux_acc + aux
+                outs.append(c2)
+            ys = tuple(outs) if slot_caches is not None else None
+            return (xx, aux_acc), ys
+
+        body = jax.checkpoint(group_body) if cfg.remat else group_body
+        slot_params = tuple(params["groups"][j] for j in range(plen))
+        slot_caches = tuple(cache["groups"][j] for j in range(plen)) \
+            if cache is not None else None
+        (x, aux_total), group_caches = jax.lax.scan(
+            body, (x, aux_total), (slot_params, slot_caches))
+        if cache is not None:
+            new_cache["groups"] = list(group_caches)
+        else:
+            new_cache = None
+
+    for t in range(n_tail):
+        li = n_pre + n_groups * plen + t
+        c = cache["tail"][t] if cache is not None else None
+        x, c2, aux = run_block(params["tail"][t], x, cfg.mixer_of(li),
+                               cfg.mlp_of(li), c)
+        aux_total += aux
+        if cache is not None:
+            new_cache["tail"].append(c2)
+
+    x = L.norm_apply(params["final_norm"], x, cfg.norm)
+    if logits_slice is not None:
+        x = x[:, -logits_slice:]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    logits = L.logits_softcap(logits, cfg.logit_softcap)
+    logits = logits + _vocab_mask(cfg).astype(logits.dtype)
+    return constrain(logits, L.DATA, None, L.MODEL), new_cache, aux_total
+
+
+def _cache_pos(cache):
+    for part in ("prefix", "tail"):
+        if cache[part]:
+            return cache[part][0].pos
+    for g in cache["groups"]:
+        if g is not None:
+            return g.pos[0]
+    raise ValueError("empty cache")

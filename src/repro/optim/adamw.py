@@ -1,0 +1,95 @@
+"""AdamW + schedules — minimal, pytree-native, shard-friendly.
+
+Moments inherit the *param* sharding (spec-wise: same PartitionSpec tree),
+so ZeRO-style optimizer-state sharding falls out of the param sharding; the
+``moment_dtype`` knob (fp32 default, bf16 for the 314B-scale configs) is the
+memory/precision trade recorded in DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_end: float = 3e-5
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+    schedule: str = "cosine"      # cosine | linear | const
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0, 1)
+    if cfg.schedule == "cosine":
+        dec = cfg.lr_end + 0.5 * (cfg.lr_peak - cfg.lr_end) * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        dec = cfg.lr_peak + (cfg.lr_end - cfg.lr_peak) * t
+    else:
+        dec = jnp.asarray(cfg.lr_peak)
+    return warm * dec
+
+
+def init(cfg: AdamWConfig, params: Any) -> AdamWState:
+    md = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, md)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(zeros, params),
+                      jax.tree.map(zeros, params))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads: Any, state: AdamWState, params: Any
+           ) -> tuple[Any, AdamWState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm else jnp.float32(1.0)
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    md = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m1 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v1 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat, vhat = m1 / b1c, v1 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m1.astype(md), v1.astype(md))
+
+    pf, td = jax.tree.flatten(params)
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(
+        pf, jax.tree.leaves(grads), jax.tree.leaves(state.mu),
+        jax.tree.leaves(state.nu))]
+    new_p = td.unflatten([o[0] for o in outs])
+    new_m = td.unflatten([o[1] for o in outs])
+    new_v = td.unflatten([o[2] for o in outs])
+    return new_p, AdamWState(step, new_m, new_v), \
+        {"grad_norm": gnorm, "lr": lr}

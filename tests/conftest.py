@@ -1,0 +1,15 @@
+import os
+import sys
+
+# tests see the single real CPU device (the dry-run sets its own flags in
+# its own process); keep any user XLA_FLAGS out of the picture
+os.environ.pop("XLA_FLAGS", None)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

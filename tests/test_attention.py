@@ -1,0 +1,97 @@
+"""Attention: flash custom-vjp vs oracle, rolling-window cache, MLA."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import attention as A
+from repro.models.config import ModelConfig
+
+
+@pytest.mark.parametrize("b,sq,sk,hq,hkv,dk,dv,causal,win", [
+    (2, 33, 33, 4, 2, 16, 16, True, None),
+    (2, 64, 64, 4, 4, 8, 8, True, 24),
+    (1, 17, 40, 6, 2, 8, 12, False, None),
+    (2, 128, 128, 2, 1, 32, 32, True, 32),
+])
+def test_flash_matches_ref_values_and_grads(b, sq, sk, hq, hkv, dk, dv,
+                                            causal, win):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, sq, hq, dk))
+    k = jax.random.normal(ks[1], (b, sk, hkv, dk))
+    v = jax.random.normal(ks[2], (b, sk, hkv, dv))
+    o1 = A.attend(q, k, v, causal=causal, window=win, kv_block=16)
+    o2 = A.attend_ref(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+    f1 = lambda *a: A.attend(*a, causal=causal, window=win, kv_block=16).sum()
+    f2 = lambda *a: A.attend_ref(*a, causal=causal, window=win).sum()
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, bb in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=2e-4)
+
+
+def test_softcap_forward_and_grad():
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 8, 2, 8))
+    k = jax.random.normal(key, (1, 8, 2, 8)) * 3
+    v = jax.random.normal(key, (1, 8, 2, 8))
+    o1 = A.attend(q, k, v, causal=True, kv_block=4, softcap=5.0)
+    o2 = A.attend_ref(q, k, v, causal=True, softcap=5.0)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+    g1 = jax.grad(lambda x: A.attend(x, k, v, causal=True, kv_block=4,
+                                     softcap=5.0).sum())(q)
+    g2 = jax.grad(lambda x: A.attend_ref(x, k, v, causal=True,
+                                         softcap=5.0).sum())(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=2e-4)
+
+
+def _mini_cfg(window=None):
+    return ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                       n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                       window=window, rope_theta=100.0)
+
+
+def test_rolling_window_cache_equals_full_cache():
+    """Decoding with a rolling `window`-slot cache == full-length cache."""
+    cfg = _mini_cfg(window=8)
+    key = jax.random.PRNGKey(2)
+    p, _ = A.gqa_init(key, cfg)
+    steps = 24
+    xs = jax.random.normal(key, (1, steps, 32)) * 0.5
+
+    full = A.gqa_empty_cache(cfg, 1, steps, jnp.float32)       # full length
+    roll = A.KVCache(jnp.zeros((1, 8, 2, 8)), jnp.zeros((1, 8, 2, 8)),
+                     jnp.zeros((), jnp.int32))                 # rolling
+    outs_f, outs_r = [], []
+    for t in range(steps):
+        pos = jnp.array([[t]])
+        o_f, full = A.gqa_apply(p, xs[:, t:t + 1], cfg, positions=pos,
+                                cache=full, window=8)
+        o_r, roll = A.gqa_apply(p, xs[:, t:t + 1], cfg, positions=pos,
+                                cache=roll, window=8)
+        outs_f.append(np.asarray(o_f))
+        outs_r.append(np.asarray(o_r))
+    np.testing.assert_allclose(np.concatenate(outs_r, 1),
+                               np.concatenate(outs_f, 1), atol=1e-5)
+
+
+def test_mla_decode_matches_forward():
+    cfg = ModelConfig(name="m", family="moe", n_layers=1, d_model=48,
+                      n_heads=4, n_kv_heads=4, head_dim=16, attn_kind="mla",
+                      kv_lora_rank=24, qk_rope_dim=8, mla_v_dim=16,
+                      d_ff=64, vocab_size=64, rope_theta=100.0)
+    key = jax.random.PRNGKey(3)
+    p, _ = A.mla_init(key, cfg)
+    x = jax.random.normal(key, (2, 9, 48)) * 0.5
+    pos = jnp.arange(9)[None]
+    o_full, _ = A.mla_apply(p, x, cfg, positions=pos)
+    cache = A.mla_empty_cache(cfg, 2, 9, jnp.float32)
+    o_pre, cache = A.mla_apply(p, x[:, :8], cfg, positions=pos[:, :8],
+                               cache=cache)
+    o_dec, cache = A.mla_apply(p, x[:, 8:9], cfg, positions=pos[:, 8:9],
+                               cache=cache)
+    np.testing.assert_allclose(np.asarray(o_dec), np.asarray(o_full[:, 8:9]),
+                               atol=2e-5)

@@ -1,0 +1,82 @@
+"""End-to-end PIMCQG engine: recall, footprint math, placement, routing."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import compact_index, engine, placement
+from repro.data.synthetic import clustered_vectors, ground_truth, query_set
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    x, _ = clustered_vectors(1, 4000, 64, 16)
+    q = query_set(1, x, 48)
+    gt = ground_truth(x, q, 10)
+    return x, q, gt
+
+
+@pytest.mark.parametrize("mode,scan", [
+    ("mulfree", "beam"), ("exact", "beam"), ("mulfree", "gemv")])
+def test_engine_recall(corpus, mode, scan):
+    x, q, gt = corpus
+    icfg = compact_index.IndexConfig(dim=64, n_clusters=16, degree=16,
+                                     knn_k=32)
+    scfg = engine.SearchConfig(nprobe=4, ef=40, k=10, mode=mode, scan=scan)
+    eng = engine.PIMCQGEngine.build(jax.random.PRNGKey(0), x, icfg, scfg,
+                                    n_shards=4)
+    res, stats = eng.search(q)
+    ids = np.asarray(res.ids)
+    rec = np.mean([len(set(ids[i]) & set(gt[i])) / 10 for i in range(len(q))])
+    assert rec > 0.82, (mode, scan, rec)
+    assert int(stats.dropped_lanes) == 0
+    # exact distances really are exact
+    d0 = float(res.dists[0, 0])
+    true0 = float(((x[ids[0, 0]] - q[0]) ** 2).sum())
+    assert abs(d0 - true0) < 1e-2 * max(true0, 1.0)
+
+
+def test_footprint_matches_table2_math():
+    """Table II: SIFT1B (D=128, R=32) 1423 GB -> 138 GB, 10.3x."""
+    rep = compact_index.footprint_report(dim=128, degree=32, n=10 ** 9)
+    assert rep["symphonyqg_bytes"] / 1e9 == pytest.approx(1424, rel=0.05)
+    assert rep["pimcqg_bytes"] / 1e9 == pytest.approx(148, rel=0.05)
+    assert rep["reduction"] == pytest.approx(10.3, rel=0.1)
+    # SSN1B (D=256, R=32): paper reports 2385 GB -> 164 GB = 14.5x
+    rep = compact_index.footprint_report(dim=256, degree=32, n=10 ** 9)
+    assert rep["reduction"] == pytest.approx(14.5, rel=0.15)
+
+
+def test_placement_balances_load(rng):
+    freq = rng.pareto(1.5, 64) + 0.1          # skewed popularity
+    bpc = np.full(64, 1000)
+    pl = placement.greedy_place(freq, bpc, 8)
+    assert sorted(np.bincount(pl.shard_of, minlength=8)) == [8] * 8
+    loads = np.asarray([freq[pl.shard_of == s].sum() for s in range(8)])
+    # LPT bound: a shard never exceeds mean + the largest single item
+    # (a single mega-popular cluster cannot be split)
+    assert loads.max() <= loads.mean() * 1.34 + freq.max()
+    # permutation consistency
+    order = pl.order
+    assert sorted(order.tolist()) == list(range(64))
+    for cid in range(64):
+        s, slot = pl.shard_of[cid], pl.local_slot[cid]
+        assert order[s * pl.per_shard + slot] == cid
+
+
+def test_route_lanes_inverse_map():
+    rng = np.random.default_rng(42)     # own stream: capacity math below
+    probe = jnp.asarray(rng.integers(0, 16, (12, 4), dtype=np.int32))
+    shard_of = jnp.asarray(np.arange(16, dtype=np.int32) % 4)
+    local_slot = jnp.asarray(np.arange(16, dtype=np.int32) // 4)
+    lane_q, lane_cl, inv, dropped = engine.route_lanes(
+        probe, shard_of, local_slot, n_shards=4, capacity=16)
+    assert int(dropped) == 0
+    lane_q, lane_cl, inv = map(np.asarray, (lane_q, lane_cl, inv))
+    for qi in range(12):
+        for pi in range(4):
+            slot = inv[qi, pi]
+            s, l = divmod(slot, 16)
+            assert lane_q[s, l] == qi
+            assert lane_cl[s, l] == int(probe[qi, pi]) // 4

@@ -1,0 +1,75 @@
+"""IVF clustering + per-cluster proximity graph invariants."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import graph, ivf
+
+
+def test_kmeans_basic(rng):
+    # three well-separated blobs
+    blobs = np.concatenate([
+        rng.normal(0, 0.1, (50, 8)) + off
+        for off in (0.0, 5.0, -5.0)]).astype(np.float32)
+    km = ivf.kmeans(jax.random.PRNGKey(0), jnp.asarray(blobs), 3, iters=10)
+    sizes = np.asarray(km.sizes)
+    assert sizes.sum() == 150
+    assert (sizes > 0).all()
+    # each blob maps to a single cluster
+    a = np.asarray(km.assignment)
+    for s in range(0, 150, 50):
+        assert len(set(a[s:s + 50])) == 1
+
+
+def test_cluster_filter_returns_nearest(rng):
+    cents = jnp.asarray(rng.normal(0, 5, (10, 8)).astype(np.float32))
+    q = cents[3][None] + 0.01
+    ids, d = ivf.cluster_filter(q, cents, nprobe=3)
+    assert int(ids[0, 0]) == 3
+    assert d.shape == (1, 3)
+
+
+def test_graph_invariants(rng):
+    n, d, r = 200, 16, 8
+    x = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+    valid = jnp.ones((n,), bool).at[-20:].set(False)  # 20 padded rows
+    g = graph.build_cluster_graph(x, valid, r=r, knn_k=24)
+    nb = np.asarray(g.neighbors)
+    assert nb.shape == (n, r)
+    # no self edges; no edges from/to padded rows; in-range
+    for i in range(n):
+        row = nb[i][nb[i] >= 0]
+        assert (row != i).all()
+        assert (row < n).all()
+        if i >= n - 20:
+            assert len(row) == 0
+        else:
+            assert (row < n - 20).all()
+            assert len(row) >= 1          # navigability: at least one edge
+    assert 0 <= int(g.entry) < n - 20
+    assert int(g.n_valid) == n - 20
+
+
+def test_graph_greedy_reachability(rng):
+    """Greedy search on the pruned graph reaches (near-)nearest nodes."""
+    n, d = 150, 8
+    x = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+    valid = jnp.ones((n,), bool)
+    g = graph.build_cluster_graph(x, valid, r=10, knn_k=32)
+    nb = np.asarray(g.neighbors)
+    xs = np.asarray(x)
+    hits = 0
+    for t in range(20):
+        q = xs[rng.integers(n)] + rng.normal(0, 0.05, d).astype(np.float32)
+        best = int(g.entry)
+        for _ in range(50):
+            cands = [best] + [int(j) for j in nb[best] if j >= 0]
+            nxt = min(cands, key=lambda i: float(((xs[i] - q) ** 2).sum()))
+            if nxt == best:
+                break
+            best = nxt
+        true = int(np.argmin(((xs - q) ** 2).sum(1)))
+        true10 = set(np.argsort(((xs - q) ** 2).sum(1))[:10])
+        hits += best in true10 or best == true
+    assert hits >= 17, hits

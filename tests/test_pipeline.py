@@ -1,0 +1,71 @@
+"""O2 scheduling: simulator policy ordering (Fig 16), Eq(1) tuner, executor."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import compact_index, engine
+from repro.core.pipeline import (AsyncExecutor, EventSimulator, LinkModel,
+                                 StageCosts, tune_minibatch)
+from repro.data.synthetic import clustered_vectors, query_set
+
+
+def _costs():
+    link = LinkModel(setup_s=5e-6, bw_bytes_s=1e9, knee_bytes=8192,
+                     congestion=0.3)
+    return StageCosts(
+        t_pre=lambda n: 2e-6 * n + 1e-6,
+        t_proc=lambda n: 40e-6 * n + 10e-6,
+        t_post=lambda n: 15e-6 * n + 2e-6,
+        link=link, query_bytes=512, result_bytes=512)
+
+
+def test_policy_ordering_matches_fig16():
+    """dynamic mini-batch > batch-sync and >> per-query (paper Fig 16)."""
+    sim = EventSimulator(n_pus=16, costs=_costs(), rerank_workers=4)
+    n = 2000
+    rng = np.random.default_rng(0)
+    pus = rng.integers(0, 16, n)
+    arr = np.cumsum(rng.exponential(5e-6, n))
+    r_pq = sim.per_query(n, pus)
+    r_bs = sim.batch_sync(n, 256, pus)
+    r_p1 = sim.pipeline(n, 1, pus)
+    r_dyn = sim.dynamic(arr, pus, threshold=8, wait_limit_s=1e-3)
+    assert r_dyn.qps > r_bs.qps, (r_dyn.qps, r_bs.qps)
+    assert r_dyn.qps > 2 * r_pq.qps, (r_dyn.qps, r_pq.qps)
+    assert r_dyn.qps > r_p1.qps, (r_dyn.qps, r_p1.qps)
+
+
+def test_minibatch_tuner_prefers_fast_range():
+    n, per_q = tune_minibatch(_costs())
+    assert n >= 2                         # batching beats per-query
+    assert n * 512 <= _costs().link.knee_bytes  # stays in fast range
+    assert per_q[n] <= 1.05 * min(per_q.values())
+
+
+def test_async_executor_matches_sync_results():
+    x, _ = clustered_vectors(3, 2000, 32, 8)
+    q = query_set(3, x, 32)
+    icfg = compact_index.IndexConfig(dim=32, n_clusters=8, degree=8, knn_k=16)
+    scfg = engine.SearchConfig(nprobe=2, ef=16, k=5)
+    eng = engine.PIMCQGEngine.build(jax.random.PRNGKey(0), x, icfg, scfg,
+                                    n_shards=2)
+    sync_ids = []
+    for s in range(0, 32, 8):
+        res, _ = eng.search(q[s:s + 8])
+        sync_ids.append(np.asarray(res.ids))
+    sync_ids = np.concatenate(sync_ids)
+    ex = AsyncExecutor(eng, minibatch=8, fifo_depth=2)
+    ids, dists, dt = ex.run(q)
+    np.testing.assert_array_equal(ids, sync_ids)
+
+
+def test_simulator_breakdown_conserves_time():
+    sim = EventSimulator(n_pus=8, costs=_costs(), rerank_workers=4)
+    rep = sim.pipeline(500, 8)
+    assert rep.n_queries == 500
+    assert rep.makespan_s > 0
+    # busy fraction bounded by the stage's resource-pool size
+    pool = {"prep": 1, "xfer_in": 1, "xfer_out": 1, "search": 8, "rerank": 4}
+    for stage, frac in rep.stage_busy.items():
+        assert 0 <= frac <= pool[stage] + 1e-3, (stage, frac)

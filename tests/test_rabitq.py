@@ -1,0 +1,62 @@
+"""RabitQ estimator properties (paper's inherited quantizer)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rabitq
+
+
+def test_pack_unpack_roundtrip(rng):
+    bits = jnp.asarray(rng.integers(0, 2, (13, 64), dtype=np.uint8))
+    packed = rabitq.pack_codes(bits)
+    un = rabitq.unpack_codes(packed, 64)
+    np.testing.assert_array_equal(np.asarray(un), np.asarray(bits))
+
+
+@settings(max_examples=20, deadline=None)
+@given(dim=st.sampled_from([16, 32, 64, 96]), seed=st.integers(0, 2**16))
+def test_rotation_orthogonal(dim, seed):
+    p = rabitq.random_rotation(jax.random.PRNGKey(seed), dim)
+    eye = np.asarray(p @ p.T)
+    np.testing.assert_allclose(eye, np.eye(dim), atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_estimator_error_bound(seed):
+    """RabitQ's <o,q> estimator concentrates with O(1/sqrt(D)) error."""
+    d, n = 128, 256
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (n, d))
+    c = jnp.zeros((d,))
+    rot = rabitq.random_rotation(k2, d)
+    codes = rabitq.encode(x, c, rot, dim=d)
+    q = jax.random.normal(k3, (d,))
+    lut = rabitq.prepare_query(q, c, rot)
+    est = rabitq.estimate_inner(codes, lut)
+    true = (x / jnp.linalg.norm(x, axis=1, keepdims=True)) @ \
+        (q / jnp.linalg.norm(q))
+    err = np.asarray(jnp.abs(est - true))
+    # theoretical bound ~ 1/ (cos_theta sqrt(D)) per-coordinate; allow slack
+    assert np.mean(err) < 3.0 / np.sqrt(d), np.mean(err)
+    assert np.percentile(err, 95) < 8.0 / np.sqrt(d)
+
+
+def test_estimated_sqdist_ranks_like_exact(rng):
+    d, n = 64, 512
+    key = jax.random.PRNGKey(1)
+    x = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+    c = jnp.mean(x, axis=0)
+    rot = rabitq.random_rotation(key, d)
+    codes = rabitq.encode(x, c, rot, dim=d)
+    q = jnp.asarray(rng.normal(0, 1, (d,)).astype(np.float32))
+    lut = rabitq.prepare_query(q, c, rot)
+    est = np.asarray(rabitq.estimate_sqdist(codes, lut))
+    true = np.asarray(rabitq.exact_sqdist(x, q))
+    # top-10 by estimate should capture most of true top-10
+    top_est = set(np.argsort(est)[:20])
+    top_true = set(np.argsort(true)[:10])
+    assert len(top_est & top_true) >= 7
