@@ -3,7 +3,7 @@
 Paper: DPU search is <=50%% of wall time; post-processing (result return +
 host exact rerank) dominates — the cost of evicting raw vectors (O1.2).
 The simulator (calibrated like Fig 16) reports per-stage busy time; the
-real AsyncExecutor cross-checks end-to-end overlap on this host.
+real StreamingScheduler cross-checks end-to-end overlap on this host.
 """
 
 from __future__ import annotations
@@ -11,7 +11,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import engine
-from repro.core.pipeline import AsyncExecutor, EventSimulator, tune_minibatch
+from repro.core.pipeline import (EventSimulator, StreamingScheduler,
+                                 tune_minibatch)
 from .common import build_engine, fmt_row, make_workload, timed_qps
 from .scheduling import calibrated_costs
 
@@ -33,14 +34,15 @@ def run(verbose: bool = True) -> list[str]:
                         f"search_frac={search_frac:.2f} (paper <=0.5) "
                         f"post_frac={post_frac:.2f} (paper: dominant)"))
 
-    # real overlapped executor vs serial per-minibatch loop (both warmed)
-    ex = AsyncExecutor(eng, minibatch=16, fifo_depth=3)
-    ex.run(w.q)                                   # compile size-16 graph
-    _, _, t_async = ex.run(w.q)
+    # real overlapped scheduler vs serial per-minibatch loop (both warmed)
+    sched = StreamingScheduler(eng, buckets=(16,), fill_threshold=16,
+                               fifo_depth=3)
+    sched.run(w.q)                                # compile size-16 graph
+    t_async = sched.run(w.q).makespan_s
     import time as _t
     t0 = _t.perf_counter()
     for s0 in range(0, len(w.q), 16):
-        res, _ = eng.search(w.q[s0:s0 + 16])
+        res, _ = eng.search(w.q[s0:s0 + 16], pad_to=16)
         np.asarray(res.ids)                       # block (no overlap)
     t_serial = _t.perf_counter() - t0
     rows.append(fmt_row("fig14_async_overlap", t_async * 1e6,

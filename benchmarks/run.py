@@ -9,6 +9,7 @@ headers). Modules:
     qps_recall      Fig 10/11  QPS + QPS/W vs recall frontier
     overfetch       Fig 15     EF sweep vs SymphonyQG-mode baseline
     scheduling      Fig 16     policy comparison (calibrated simulator)
+    streaming       §IV-B      bucketed streaming scheduler vs per-shape
     breakdown       Fig 14     five-stage pipeline breakdown
     mulfree_bench   Fig 17/9   shift-add kernel time + recall delta
     pim_baselines   Fig 13     IVF-PQ recall ceiling vs PIMCQG
@@ -28,6 +29,7 @@ MODULES = [
     ("fig10", "qps_recall"),
     ("fig15", "overfetch"),
     ("fig16", "scheduling"),
+    ("stream", "streaming"),
     ("fig14", "breakdown"),
     ("fig17", "mulfree_bench"),
     ("fig13", "pim_baselines"),

@@ -4,9 +4,11 @@
 
 The paper's production position for billion-scale ANNS: a serving stack
 emits query embeddings, the PIMCQG engine (cluster filter -> in-"PU" beam
-search -> host rerank) returns neighbors, all through the asynchronous
-mini-batched pipeline (O2). This driver runs the reduced-config LM,
-retrieves per generated batch, and reports decode + retrieval throughput.
+search -> host rerank) returns neighbors, all through the streaming
+scheduler (O2's dynamic mini-batching over a shape-stable bucket ladder:
+any arrival batch size reuses one of a few jitted executables). This
+driver runs the reduced-config LM, retrieves per generated batch, and
+reports decode + retrieval throughput.
 """
 
 import argparse

@@ -82,26 +82,50 @@ def _place(idx: compact_index.CompactIndex, pl: placement_mod.Placement) -> Plac
 # Lane routing (host dispatch): (Q, nprobe) probes -> per-shard lane tables
 # ---------------------------------------------------------------------------
 
+def _lane_capacity(nq: int, nprobe: int, n_shards: int, factor: float) -> int:
+    """Per-shard lane-buffer size for an nq-query batch (host-side math;
+    also tabulated per n_valid so padded executables drop lanes exactly
+    like the unpadded executable would)."""
+    return max(1, int(np.ceil(nq * nprobe / n_shards * factor)))
+
+
 @functools.partial(jax.jit, static_argnames=("n_shards", "capacity"))
 def route_lanes(probe_cids: jax.Array, shard_of: jax.Array, local_slot: jax.Array,
+                valid_q: jax.Array | None = None,
+                capacity_valid: jax.Array | None = None,
                 *, n_shards: int, capacity: int):
     """Build static-shape per-shard lane tables.
 
     probe_cids (Q, P) global cluster ids -> for shard s: lane_q (S, L),
     lane_cl (S, L) local cluster slots (-1 pad); plus the inverse map
     (Q, P) -> flat slot into the (S*L,) result array for candidate gather.
+
+    valid_q (Q,) bool marks real queries; lanes of pad queries (bucketed
+    batches) are routed to a sentinel shard that sorts after every real
+    shard, so real lanes land in exactly the slots an unpadded batch would
+    give them, and pads never occupy capacity nor count as dropped.
+
+    capacity_valid (traced scalar <= capacity) optionally tightens the
+    drop threshold to the capacity an unpadded batch of the real queries
+    would get, so overflow drops are also identical under padding.
     """
     q, p = probe_cids.shape
     flat_cid = probe_cids.reshape(-1)                      # (QP,)
     flat_q = jnp.repeat(jnp.arange(q, dtype=jnp.int32), p)
     lane_shard = shard_of[flat_cid]                        # (QP,)
+    if valid_q is not None:
+        live = jnp.repeat(valid_q, p)
+        lane_shard = jnp.where(live, lane_shard, n_shards)
     order = jnp.argsort(lane_shard, stable=True)
     sh_sorted = lane_shard[order]
     # position within shard = index - first index of that shard
     first = jnp.searchsorted(sh_sorted, jnp.arange(n_shards), side="left")
-    pos = jnp.arange(q * p) - first[sh_sorted]
-    ok = pos < capacity
-    dropped = jnp.sum(~ok)
+    pos = jnp.arange(q * p) - first[jnp.clip(sh_sorted, 0, n_shards - 1)]
+    real = sh_sorted < n_shards
+    cap = capacity if capacity_valid is None \
+        else jnp.minimum(capacity, capacity_valid)
+    ok = (pos < cap) & real
+    dropped = jnp.sum(~ok & real)
 
     # overflowing lanes get an out-of-bounds destination -> dropped by scatter
     dest = jnp.where(ok, sh_sorted * capacity + pos, n_shards * capacity)
@@ -203,7 +227,8 @@ class PIMCQGEngine:
                  host: compact_index.HostStore,
                  place: placement_mod.Placement,
                  icfg: compact_index.IndexConfig,
-                 scfg: SearchConfig):
+                 scfg: SearchConfig,
+                 buckets: tuple[int, ...] | None = None):
         self.index = index
         self.host = host
         self.place = place
@@ -213,35 +238,45 @@ class PIMCQGEngine:
         self.shard_of = jnp.asarray(place.shard_of)
         self.local_slot = jnp.asarray(place.local_slot)
         self._search_cache: dict = {}
+        self.buckets = tuple(sorted(set(buckets))) if buckets else ()
 
     # -- construction -------------------------------------------------------
     @classmethod
     def build(cls, key, x: np.ndarray, icfg: compact_index.IndexConfig,
               scfg: SearchConfig, *, n_shards: int = 1,
-              freq: np.ndarray | None = None, verbose: bool = False
-              ) -> "PIMCQGEngine":
+              freq: np.ndarray | None = None, verbose: bool = False,
+              buckets: tuple[int, ...] | None = None) -> "PIMCQGEngine":
         idx, host = compact_index.build_compact_index(key, x, icfg, verbose=verbose)
         sizes = np.asarray(idx.n_valid)
         bpc = sizes * compact_index.compact_bytes_per_node(icfg.dim, icfg.degree)
         if freq is None:
             freq = sizes.astype(np.float64)   # popularity ~ size as prior
         pl = placement_mod.greedy_place(freq, bpc, n_shards)
-        return cls(idx, host, pl, icfg, scfg)
+        return cls(idx, host, pl, icfg, scfg, buckets=buckets)
 
     # -- query path ---------------------------------------------------------
-    def _build_search_fn(self, num_queries: int):
+    def _build_search_fn(self, bucket: int):
+        """One XLA executable per *bucket* size; n_valid <= bucket marks the
+        real queries — pads are masked out of routing, search, and rerank."""
         cfg, dim = self.scfg, self.icfg.dim
         s = self.place.n_shards
-        capacity = max(1, int(np.ceil(num_queries * cfg.nprobe / s
-                                      * cfg.lane_capacity_factor)))
+        capacity = _lane_capacity(bucket, cfg.nprobe, s,
+                                  cfg.lane_capacity_factor)
+        # capacity an UNPADDED batch of n real queries would get, tabulated
+        # on host so the traced lookup matches the host formula bit-exactly
+        cap_table = jnp.asarray(
+            [_lane_capacity(n, cfg.nprobe, s, cfg.lane_capacity_factor)
+             for n in range(bucket + 1)], jnp.int32)
         shard_fn = _make_shard_search(cfg, dim)
 
         @jax.jit
         def search_step(placed: PlacedIndex, centroids, rotation, vectors,
-                        queries):
+                        queries, n_valid):
             probe, _ = ivf.cluster_filter(queries, centroids, nprobe=cfg.nprobe)
+            valid = jnp.arange(bucket, dtype=jnp.int32) < n_valid
+            cap_valid = cap_table[jnp.clip(n_valid, 0, bucket)]
             lane_q, lane_cl, inv, dropped = route_lanes(
-                probe, self.shard_of, self.local_slot,
+                probe, self.shard_of, self.local_slot, valid, cap_valid,
                 n_shards=s, capacity=capacity)
             cent_l = placed.centroids                        # (S, Cl, D)
             gids, rank, hops = jax.vmap(
@@ -255,21 +290,55 @@ class PIMCQGEngine:
             safe = jnp.clip(inv, 0)                          # (Q, P)
             cand = flat_gids[safe]                           # (Q, P, EF)
             cand = jnp.where((inv >= 0)[..., None], cand, -1)
-            cand = cand.reshape(num_queries, cfg.nprobe * cfg.ef)
+            cand = cand.reshape(bucket, cfg.nprobe * cfg.ef)
             out = rerank_mod.rerank(queries, cand, vectors, k=cfg.k)
+            ids = jnp.where(valid[:, None], out.ids, -1)
+            dists = jnp.where(valid[:, None], out.dists, jnp.inf)
             stats = SearchStats(hops=hops, dropped_lanes=dropped)
-            return out, stats
+            return rerank_mod.RerankResult(ids, dists), stats
 
         return search_step
 
-    def search(self, queries) -> tuple[rerank_mod.RerankResult, SearchStats]:
+    def search(self, queries, *, pad_to: int | None = None
+               ) -> tuple[rerank_mod.RerankResult, SearchStats]:
+        """Search; with pad_to=B >= len(queries) the batch is zero-padded to
+        bucket B and the (cached) B-shaped executable is reused — results
+        for the real queries are identical to an unpadded search."""
         queries = jnp.asarray(queries, jnp.float32)
         nq = queries.shape[0]
-        if nq not in self._search_cache:
-            self._search_cache[nq] = self._build_search_fn(nq)
-        fn = self._search_cache[nq]
-        return fn(self.placed, self.index.centroids, self.index.rotation,
-                  self.host.vectors, queries)
+        b = nq if pad_to is None else int(pad_to)
+        if b < nq:
+            raise ValueError(f"pad_to={b} < batch size {nq}")
+        if b > nq:
+            queries = jnp.concatenate(
+                [queries, jnp.zeros((b - nq, queries.shape[1]), jnp.float32)])
+        if b not in self._search_cache:
+            self._search_cache[b] = self._build_search_fn(b)
+        fn = self._search_cache[b]
+        out, stats = fn(self.placed, self.index.centroids, self.index.rotation,
+                        self.host.vectors, queries, jnp.int32(nq))
+        if b > nq:
+            out = rerank_mod.RerankResult(out.ids[:nq], out.dists[:nq])
+        return out, stats
+
+    def search_bucketed(self, queries
+                        ) -> tuple[rerank_mod.RerankResult, SearchStats]:
+        """Route an arbitrary batch size through the engine's bucket ladder
+        so any arrival size hits one of len(self.buckets) executables."""
+        nq = len(queries)
+        if not self.buckets:
+            return self.search(queries)
+        for b in self.buckets:
+            if b >= nq:
+                return self.search(queries, pad_to=b)
+        raise ValueError(
+            f"batch of {nq} exceeds largest bucket {self.buckets[-1]}; "
+            f"split upstream (StreamingScheduler flushes at most max bucket)")
+
+    @property
+    def compile_count(self) -> int:
+        """Number of distinct search executables built (one per shape)."""
+        return len(self._search_cache)
 
     # -- reporting ----------------------------------------------------------
     def footprint(self) -> dict:

@@ -17,16 +17,22 @@ Three artifacts:
   * ``tune_minibatch`` — Eq (1): N* = argmin_N max(T_pre, T_proc, T_post)/N,
     with the paper's refinement of keeping transfers inside the fast range.
 
-  * ``AsyncExecutor`` — *real* overlapped execution on top of a
-    PIMCQGEngine: JAX dispatch is asynchronous, so stage ③ (device) of batch
-    i runs while the host reranks batch i-1 and preps batch i+1; FIFO depth
-    bounds in-flight work (the paper's flow control).
+  * ``StreamingScheduler`` — *real* overlapped execution on top of a
+    PIMCQGEngine: the paper's dynamic mini-batching run online. Arrivals
+    accumulate in a buffer flushed on fill-threshold OR wait-deadline; each
+    flush is padded up to a bucket from a small ladder (chosen with
+    ``tune_minibatch``) so every arrival size reuses one of
+    ``len(buckets)`` jitted executables. JAX dispatch is asynchronous, so
+    stage ③ (device) of batch i runs while the host reranks batch i-1 and
+    preps batch i+1; a bounded FIFO implements the paper's flow control,
+    and completed batches are reassembled per query (out-of-order).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 import time
 from collections import deque
 from typing import Callable
@@ -35,8 +41,9 @@ import numpy as np
 
 __all__ = [
     "LinkModel", "UPMEM_LINK", "TPU_ICI_LINK", "PCIE_LINK",
-    "StageCosts", "tune_minibatch",
-    "EventSimulator", "SimReport", "AsyncExecutor",
+    "StageCosts", "tune_minibatch", "bucket_ladder",
+    "EventSimulator", "SimReport", "round_robin_batches",
+    "StreamingScheduler", "StreamReport",
 ]
 
 
@@ -108,9 +115,40 @@ def tune_minibatch(costs: StageCosts, candidates=(1, 2, 4, 8, 16, 32, 64, 128)
     return best, per_q
 
 
+def bucket_ladder(max_batch: int, nstar: int | None = None
+                  ) -> tuple[int, ...]:
+    """Powers-of-two batch-size ladder up to ``max_batch``, with Eq (1)'s
+    N* inserted so the steady-state flush size pads by zero. Every arrival
+    batch size then routes to the next bucket up — a small fixed set of
+    shapes, hence a small fixed set of XLA executables."""
+    ladder = {max_batch}
+    b = 1
+    while b < max_batch:
+        ladder.add(b)
+        b *= 2
+    if nstar:
+        ladder.add(min(int(nstar), max_batch))
+    return tuple(sorted(ladder))
+
+
 # ---------------------------------------------------------------------------
 # Event-driven simulator (Fig 7/8/14/16)
 # ---------------------------------------------------------------------------
+
+def round_robin_batches(pus, minibatch: int) -> list[tuple[int, int, float]]:
+    """Slice each PU's queries into mini-batches and interleave them
+    round-robin — batch j of every PU precedes batch j+1 of any PU, the
+    order a uniform arrival stream offers them to the shared link. Returns
+    (pu, n_queries, ready_time) triples for ``EventSimulator._run_batches``."""
+    per_pu: dict[int, list] = {}
+    for i, pu in enumerate(pus):
+        per_pu.setdefault(int(pu), []).append(i)
+    keyed = []
+    for pu, qs in per_pu.items():
+        for j, s in enumerate(range(0, len(qs), minibatch)):
+            keyed.append((j, pu, len(qs[s:s + minibatch])))
+    keyed.sort()
+    return [(pu, nq, 0.0) for _, pu, nq in keyed]
 
 @dataclasses.dataclass
 class SimReport:
@@ -268,16 +306,8 @@ class EventSimulator:
                  ) -> SimReport:
         pus = pu_of_query if pu_of_query is not None \
             else np.arange(n_queries) % self.n_pus
-        per_pu: dict[int, list] = {}
-        for i in range(n_queries):
-            per_pu.setdefault(int(pus[i]), []).append(i)
-        batches = []
-        for pu, qs in per_pu.items():
-            for s in range(0, len(qs), minibatch):
-                batches.append((pu, len(qs[s:s + minibatch]), 0.0))
         # round-robin interleave across PUs to mimic arrival order
-        batches.sort(key=lambda b: b[2])
-        return self._run_batches(batches, None)
+        return self._run_batches(round_robin_batches(pus, minibatch), None)
 
     def dynamic(self, arrival_times: np.ndarray, pu_of_query: np.ndarray,
                 threshold: int, wait_limit_s: float) -> SimReport:
@@ -312,39 +342,156 @@ class EventSimulator:
 
 
 # ---------------------------------------------------------------------------
-# Real overlapped executor over a PIMCQGEngine
+# Real streaming scheduler over a PIMCQGEngine
 # ---------------------------------------------------------------------------
 
-class AsyncExecutor:
-    """JAX-native realization of the async pipeline: device dispatch of
-    mini-batch i+1 is enqueued before the host blocks on batch i (JAX's async
-    dispatch gives stage overlap for free); a bounded deque implements the
-    paper's FIFO flow control."""
+@dataclasses.dataclass
+class StreamReport:
+    """Per-run output of StreamingScheduler.run — per-REAL-query stats only
+    (pad queries never reach the output arrays nor the throughput figure)."""
+    ids: np.ndarray          # (N, k) int32, reassembled in submission order
+    dists: np.ndarray        # (N, k) f32 exact squared distances
+    latency_s: np.ndarray    # (N,) completion - arrival, per query
+    qps: float               # N real queries / makespan
+    p50_ms: float
+    p99_ms: float
+    n_queries: int
+    n_flushes: int
+    flush_sizes: list
+    compiles: int            # search executables built during this run
+    makespan_s: float
 
-    def __init__(self, engine, minibatch: int, fifo_depth: int = 4):
+
+class StreamingScheduler:
+    """Online realization of the paper's dynamic mini-batching (Fig 7c) on a
+    real PIMCQGEngine.
+
+    Arrivals buffer until the fill threshold is reached OR the oldest query
+    has waited ``wait_limit_s`` (Fig 7c's two flush triggers). Each flush is
+    padded up to the next size in a small bucket ladder (``bucket_ladder`` /
+    Eq (1)'s N*), so an arbitrary arrival process exercises at most
+    ``len(buckets)`` jitted executables instead of one per distinct batch
+    size. JAX's async dispatch overlaps device search with host prep/rerank;
+    a bounded in-flight FIFO is the paper's flow control; completed batches
+    are harvested out of order (``is_ready``) and reassembled per query."""
+
+    def __init__(self, engine, *, buckets=None, costs: StageCosts | None = None,
+                 fill_threshold: int | None = None, wait_limit_s: float = 2e-3,
+                 fifo_depth: int = 4, max_batch: int = 64):
+        if buckets is None:
+            if engine.buckets:
+                buckets = engine.buckets    # adopt (never mutate) the ladder
+            else:
+                nstar = tune_minibatch(costs)[0] if costs is not None else None
+                buckets = bucket_ladder(max_batch, nstar)
+        self.buckets = tuple(sorted({int(b) for b in buckets}))
         self.engine = engine
-        self.minibatch = minibatch
-        self.fifo_depth = fifo_depth
+        self.fill_threshold = int(fill_threshold or self.buckets[-1])
+        self.wait_limit_s = float(wait_limit_s)
+        self.fifo_depth = int(fifo_depth)
 
-    def run(self, queries: np.ndarray) -> tuple[np.ndarray, np.ndarray, float]:
-        nb = self.minibatch
-        n = len(queries)
-        pad = (-n) % nb
-        qp = np.concatenate([queries, np.repeat(queries[-1:], pad, 0)]) \
-            if pad else queries
-        inflight: deque = deque()
-        out_ids, out_d = [], []
+    def _dispatch(self, q):
+        """Pad a flush up to the scheduler's own ladder — the engine is
+        shared state and is never reconfigured from here."""
+        nq = len(q)
+        for b in self.buckets:
+            if b >= nq:
+                return self.engine.search(q, pad_to=b)
+        raise AssertionError(
+            f"flush of {nq} exceeds max bucket {self.buckets[-1]}")
+
+    @staticmethod
+    def _ready(res) -> bool:
+        try:
+            return bool(res.ids.is_ready())
+        except AttributeError:      # non-jax result (e.g. test doubles)
+            return True
+
+    def run(self, queries, arrival_times=None) -> StreamReport:
+        """Replay a (possibly timed) query stream through the scheduler.
+
+        arrival_times (N,) seconds from stream start (None = all at t=0);
+        the run sleeps to honor future arrivals, so QPS under a Poisson
+        trace is sustained-throughput, not batch throughput."""
+        q = np.asarray(queries, np.float32)
+        n, k = len(q), self.engine.scfg.k
+        arr = np.zeros(n) if arrival_times is None \
+            else np.asarray(arrival_times, np.float64)
+        order = np.argsort(arr, kind="stable")
+        out_ids = np.full((n, k), -1, np.int32)
+        out_d = np.full((n, k), np.inf, np.float32)
+        lat = np.full(n, np.nan)
+        inflight: deque = deque()    # (query_indices, lazy result, t_dispatch)
+        flush_sizes: list[int] = []
+        compiles0 = self.engine.compile_count
+        max_bucket = self.buckets[-1]
+        buf: list[int] = []
+        i = 0
         t0 = time.perf_counter()
-        for s in range(0, len(qp), nb):
-            res, _ = self.engine.search(qp[s:s + nb])   # async dispatch
-            inflight.append(res)
-            if len(inflight) >= self.fifo_depth:
-                r = inflight.popleft()
-                out_ids.append(np.asarray(r.ids)); out_d.append(np.asarray(r.dists))
-        while inflight:
-            r = inflight.popleft()
-            out_ids.append(np.asarray(r.ids)); out_d.append(np.asarray(r.dists))
-        dt = time.perf_counter() - t0
-        ids = np.concatenate(out_ids)[:n]
-        ds = np.concatenate(out_d)[:n]
-        return ids, ds, dt
+
+        def now() -> float:
+            return time.perf_counter() - t0
+
+        def finish(idxs, res, _t_dispatch):
+            ids = np.asarray(res.ids)           # blocks until device done
+            ds = np.asarray(res.dists)
+            tc = now()
+            out_ids[idxs] = ids
+            out_d[idxs] = ds
+            lat[idxs] = tc - arr[idxs]
+
+        def harvest(block: bool = False) -> bool:
+            got = False
+            if block and inflight:
+                finish(*inflight.popleft())
+                got = True
+            pending = list(inflight)
+            inflight.clear()
+            for rec in pending:                 # out-of-order completion
+                if self._ready(rec[1]):
+                    finish(*rec)
+                    got = True
+                else:
+                    inflight.append(rec)
+            return got
+
+        while i < n or buf or inflight:
+            t = now()
+            while i < n and arr[order[i]] <= t:
+                buf.append(int(order[i]))
+                i += 1
+            flush = bool(buf) and (
+                len(buf) >= self.fill_threshold
+                or t - arr[buf[0]] >= self.wait_limit_s
+                or i >= n)                      # stream ended: drain
+            if flush:
+                take = buf[:max_bucket]
+                del buf[:len(take)]
+                res, _ = self._dispatch(q[take])     # async device dispatch
+                inflight.append((np.asarray(take), res, t))
+                flush_sizes.append(len(take))
+                if len(inflight) >= self.fifo_depth:
+                    harvest(block=True)         # FIFO flow control
+                continue
+            if harvest(block=False):
+                continue
+            nxt = arr[order[i]] if i < n else math.inf
+            if buf:
+                nxt = min(nxt, arr[buf[0]] + self.wait_limit_s)
+            if nxt is math.inf or not math.isfinite(nxt):
+                if inflight:
+                    harvest(block=True)
+                continue
+            dt = nxt - now()
+            if dt > 0:                          # idle until next arrival or
+                time.sleep(min(dt, 5e-4))       # deadline; short naps keep
+                                                # dispatch responsive
+        makespan = now()
+        return StreamReport(
+            ids=out_ids, dists=out_d, latency_s=lat,
+            qps=n / makespan if makespan > 0 else 0.0,
+            p50_ms=float(np.percentile(lat, 50)) * 1e3 if n else 0.0,
+            p99_ms=float(np.percentile(lat, 99)) * 1e3 if n else 0.0,
+            n_queries=n, n_flushes=len(flush_sizes), flush_sizes=flush_sizes,
+            compiles=self.engine.compile_count - compiles0,
+            makespan_s=makespan)

@@ -139,8 +139,13 @@ def sharded_rerank(queries, cand_ids, vectors, mesh, *, n_total: int,
 
 def build_search_step(s: AnnsScale, n_shards: int, scan: str = "beam",
                       mesh=None, owner_rerank: bool = False):
-    """search_step(placed, centroids, rotation, vectors, queries) — same
-    function PIMCQGEngine jits, with round-robin placement maps."""
+    """search_step(placed, centroids, rotation, vectors, queries[, n_valid])
+    — same function PIMCQGEngine jits, with round-robin placement maps.
+
+    n_valid (optional traced scalar) makes the lowered executable
+    shape-stable for serving: a partially-filled query batch padded up to
+    s.queries masks its pad lanes out of routing/search/rerank, so one
+    compiled program serves every arrival size up to the bucket."""
     scfg = engine.SearchConfig(nprobe=s.nprobe, ef=s.ef, k=s.k,
                                max_iters=s.max_iters, scan=scan)
     shard_of = jnp.asarray(np.arange(s.n_clusters, dtype=np.int32)
@@ -150,10 +155,13 @@ def build_search_step(s: AnnsScale, n_shards: int, scan: str = "beam",
     capacity = int(np.ceil(s.queries * s.nprobe / n_shards * 2.0))
     shard_fn = _make_shard_search(scfg, s.dim)
 
-    def search_step(placed, centroids, rotation, vectors, queries):
+    def search_step(placed, centroids, rotation, vectors, queries,
+                    n_valid=None):
         probe, _ = ivf.cluster_filter(queries, centroids, nprobe=s.nprobe)
+        valid = None if n_valid is None else (
+            jnp.arange(s.queries, dtype=jnp.int32) < n_valid)
         lane_q, lane_cl, inv, dropped = route_lanes(
-            probe, shard_of, local_slot, n_shards=n_shards,
+            probe, shard_of, local_slot, valid, n_shards=n_shards,
             capacity=capacity)
         gids, rank, hops = jax.vmap(
             shard_fn, in_axes=(0,) * 12 + (None, None, 0, 0))(
@@ -171,6 +179,10 @@ def build_search_step(s: AnnsScale, n_shards: int, scan: str = "beam",
                                  n_total=s.n, k=s.k)
         else:
             out = rerank_mod.rerank(queries, cand, vectors, k=s.k)
+        if valid is not None:
+            out = rerank_mod.RerankResult(
+                jnp.where(valid[:, None], out.ids, -1),
+                jnp.where(valid[:, None], out.dists, jnp.inf))
         return out, hops, dropped
 
     return search_step
@@ -185,8 +197,12 @@ def model_flops(s: AnnsScale, hops_est: int = 32) -> float:
 
 
 def lower_anns(mesh, s: AnnsScale | None = None, scan: str = "beam",
-               owner_rerank: bool = False):
-    """Lower the billion-scale search step under `mesh`; returns lowered."""
+               owner_rerank: bool = False, masked: bool = False):
+    """Lower the billion-scale search step under `mesh`; returns lowered.
+
+    masked=True lowers the shape-stable serving variant: the executable
+    takes a replicated n_valid scalar so partially-filled (bucketed) query
+    batches reuse this one compiled program."""
     s = s or AnnsScale()
     n_shards = mesh.shape["model"]
     placed, host = index_specs(s, n_shards)
@@ -206,11 +222,15 @@ def lower_anns(mesh, s: AnnsScale | None = None, scan: str = "beam",
         )
         fn = build_search_step(s, n_shards, scan=scan, mesh=mesh,
                                owner_rerank=owner_rerank)
-        jitted = jax.jit(fn, in_shardings=(
-            p_shard, h_shard["centroids"], h_shard["rotation"],
-            h_shard["vectors"], h_shard["queries"]))
-        lowered = jitted.lower(placed, host["centroids"], host["rotation"],
-                               host["vectors"], host["queries"])
+        in_sh = (p_shard, h_shard["centroids"], h_shard["rotation"],
+                 h_shard["vectors"], h_shard["queries"])
+        args = (placed, host["centroids"], host["rotation"],
+                host["vectors"], host["queries"])
+        if masked:
+            in_sh += (NamedSharding(mesh, P()),)
+            args += (jax.ShapeDtypeStruct((), jnp.int32),)
+        jitted = jax.jit(fn, in_shardings=in_sh)
+        lowered = jitted.lower(*args)
     return lowered, s
 
 
@@ -234,6 +254,9 @@ def main():
     ap.add_argument("--mesh", default="both",
                     choices=["single", "multi", "both"])
     ap.add_argument("--owner-rerank", action="store_true")
+    ap.add_argument("--masked", action="store_true",
+                    help="lower the shape-stable (n_valid-masked) serving "
+                         "variant used by the streaming scheduler")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
     out = pathlib.Path(args.out)
@@ -244,7 +267,8 @@ def main():
         mesh = make_production_mesh(multi_pod=mp)
         t0 = time.time()
         lowered, s = lower_anns(mesh, scan=args.scan,
-                                owner_rerank=args.owner_rerank)
+                                owner_rerank=args.owner_rerank,
+                                masked=args.masked)
         compiled = lowered.compile()
         totals = hlo_stats.weighted_totals(compiled.as_text())
         chips = mesh.size
@@ -262,7 +286,8 @@ def main():
         except Exception as e:                              # noqa: BLE001
             mem["error"] = str(e)
         variant = f"serve_b1_{args.scan}" + \
-            ("_ownrr" if args.owner_rerank else "")
+            ("_ownrr" if args.owner_rerank else "") + \
+            ("_masked" if args.masked else "")
         rec = dict(arch="pimcqg-engine", shape=variant,
                    mesh=mesh_name, status="ok", chips=chips,
                    memory=mem, roofline=terms.as_dict(),

@@ -5,9 +5,10 @@
 
 --rag wires the paper's engine into the decode loop: each request batch's
 final hidden state (mean-pooled logits embedding here, as the stub query
-encoder) becomes a query stream into the PIMCQG async pipeline (dynamic
-mini-batching + host rerank), demonstrating the retrieval substrate in
-its production position. examples/rag_serve.py drives this path.
+encoder) becomes a query stream into the PIMCQG streaming scheduler
+(dynamic mini-batching over a shape-stable bucket ladder + host rerank),
+demonstrating the retrieval substrate in its production position.
+examples/rag_serve.py drives this path.
 """
 
 from __future__ import annotations
@@ -21,7 +22,7 @@ import numpy as np
 
 from ..configs import get_smoke
 from ..core import compact_index, engine
-from ..core.pipeline import AsyncExecutor
+from ..core.pipeline import StreamingScheduler, bucket_ladder
 from ..data.synthetic import clustered_vectors
 from ..models.model import build_model
 
@@ -40,7 +41,9 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
                                          knn_k=16)
         scfg = engine.SearchConfig(nprobe=2, ef=16, k=4)
         eng = engine.PIMCQGEngine.build(key, x, icfg, scfg, n_shards=2)
-        executor = AsyncExecutor(eng, minibatch=max(requests // 2, 1))
+        scheduler = StreamingScheduler(
+            eng, buckets=bucket_ladder(max(requests, 1)),
+            fill_threshold=max(requests // 2, 1), wait_limit_s=5e-3)
 
     B = requests
     tokens = jax.random.randint(key, (B, prompt_len), 0, cfg.vocab_size)
@@ -57,15 +60,15 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
     t0 = time.time()
     logits, cache = prefill(params, tokens, cache)
     out = [jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)]
-    retrieved = None
+    retrieved = rag_report = None
     for i in range(gen - 1):
         logits, cache = decode(params, out[-1], cache)
         out.append(jnp.argmax(logits[:, -1:], -1).astype(jnp.int32))
         if eng is not None and i == 0:
             # retrieval hook: embed the batch (stub: logits top-k pooled)
             q = np.asarray(logits[:, 0, :32], np.float32)
-            ids, dists, _ = executor.run(q)
-            retrieved = ids
+            rag_report = scheduler.run(q)
+            retrieved = rag_report.ids
     toks = jnp.concatenate(out, axis=1)
     jax.block_until_ready(toks)
     dt = time.time() - t0
@@ -75,6 +78,10 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
         if retrieved is not None:
             print(f"[serve] rag: retrieved neighbor ids (first 4 reqs): "
                   f"{retrieved[:4, :4].tolist()}")
+            print(f"[serve] rag: scheduler buckets={scheduler.buckets} "
+                  f"flushes={rag_report.n_flushes} "
+                  f"compiles={rag_report.compiles} "
+                  f"p50={rag_report.p50_ms:.1f}ms")
     return np.asarray(toks), retrieved
 
 

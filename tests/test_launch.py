@@ -37,6 +37,7 @@ def test_40_cells_defined():
     assert len(runnable) == 33     # 40 - 7 full-attention long_500k skips
 
 
+@pytest.mark.slow
 def test_train_resume_continues(tmp_path):
     from repro.launch.train import run
     ck = str(tmp_path / "ck")

@@ -10,6 +10,9 @@ import pytest
 
 from repro.configs import all_arch_ids, get_config, get_smoke
 from repro.launch.shapes import cell_applicable
+
+# ~2.5 min of per-arch forwards; excluded from the -m "not slow" fast lane
+pytestmark = pytest.mark.slow
 from repro.models.model import build_model, make_train_step
 from repro.optim import adamw
 

@@ -1,13 +1,12 @@
-"""O2 scheduling: simulator policy ordering (Fig 16), Eq(1) tuner, executor."""
+"""O2 scheduling: simulator policy ordering (Fig 16), Eq(1) tuner, bucket
+ladder, round-robin interleave. The real streaming scheduler is covered in
+tests/test_streaming.py."""
 
 import numpy as np
-import jax
-import pytest
 
-from repro.core import compact_index, engine
-from repro.core.pipeline import (AsyncExecutor, EventSimulator, LinkModel,
-                                 StageCosts, tune_minibatch)
-from repro.data.synthetic import clustered_vectors, query_set
+from repro.core.pipeline import (EventSimulator, LinkModel, StageCosts,
+                                 bucket_ladder, round_robin_batches,
+                                 tune_minibatch)
 
 
 def _costs():
@@ -43,21 +42,44 @@ def test_minibatch_tuner_prefers_fast_range():
     assert per_q[n] <= 1.05 * min(per_q.values())
 
 
-def test_async_executor_matches_sync_results():
-    x, _ = clustered_vectors(3, 2000, 32, 8)
-    q = query_set(3, x, 32)
-    icfg = compact_index.IndexConfig(dim=32, n_clusters=8, degree=8, knn_k=16)
-    scfg = engine.SearchConfig(nprobe=2, ef=16, k=5)
-    eng = engine.PIMCQGEngine.build(jax.random.PRNGKey(0), x, icfg, scfg,
-                                    n_shards=2)
-    sync_ids = []
-    for s in range(0, 32, 8):
-        res, _ = eng.search(q[s:s + 8])
-        sync_ids.append(np.asarray(res.ids))
-    sync_ids = np.concatenate(sync_ids)
-    ex = AsyncExecutor(eng, minibatch=8, fifo_depth=2)
-    ids, dists, dt = ex.run(q)
-    np.testing.assert_array_equal(ids, sync_ids)
+def test_bucket_ladder_shapes():
+    assert bucket_ladder(64) == (1, 2, 4, 8, 16, 32, 64)
+    assert bucket_ladder(64, 12) == (1, 2, 4, 8, 12, 16, 32, 64)
+    assert bucket_ladder(16, 128) == (1, 2, 4, 8, 16)  # N* clamped to max
+    assert bucket_ladder(1) == (1,)
+
+
+def test_pipeline_batches_round_robin_interleaved():
+    """Regression: batches must interleave across PUs (batch j of every PU
+    before batch j+1 of any), not stay grouped per-PU — grouped order
+    serializes the shared link exactly like batch-sync (Fig 16)."""
+    pus = np.repeat(np.arange(4), 8)      # 8 queries each on PUs 0..3
+    batches = round_robin_batches(pus, minibatch=4)
+    assert [b[0] for b in batches] == [0, 1, 2, 3, 0, 1, 2, 3]
+    assert all(b[1] == 4 for b in batches)
+    # uneven loads: PU 0 has 3 batches, PU 1 has 1 — PU 0's later batches
+    # trail everyone's first
+    pus = np.array([0] * 9 + [1] * 4)
+    batches = round_robin_batches(pus, minibatch=4)
+    assert [b[0] for b in batches] == [0, 1, 0, 0]
+    assert [b[1] for b in batches] == [4, 4, 4, 1]
+
+
+def test_pipeline_interleave_beats_grouped_order():
+    """The interleaved schedule must not be slower than the old per-PU
+    grouped order it replaced (the shared link drains evenly)."""
+    sim = EventSimulator(n_pus=16, costs=_costs(), rerank_workers=4)
+    pus = np.arange(2000) % 16
+    interleaved = sim._run_batches(round_robin_batches(pus, 8), None)
+    per_pu: dict[int, list] = {}
+    for i, pu in enumerate(pus):
+        per_pu.setdefault(int(pu), []).append(i)
+    grouped = [(pu, len(qs[s:s + 8]), 0.0)
+               for pu, qs in per_pu.items()
+               for s in range(0, len(qs), 8)]
+    r_grouped = sim._run_batches(grouped, None)
+    assert interleaved.qps >= r_grouped.qps * 0.99
+    assert interleaved.mean_latency_s <= r_grouped.mean_latency_s
 
 
 def test_simulator_breakdown_conserves_time():

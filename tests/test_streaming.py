@@ -1,0 +1,215 @@
+"""Shape-stable streaming serving layer: bucketed/padded search equivalence,
+lane-routing overflow, and the StreamingScheduler's pad/reassembly
+guarantees (ISSUE 1 tentpole)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import compact_index, engine
+from repro.core.pipeline import StreamingScheduler
+from repro.data.synthetic import clustered_vectors, query_set
+
+
+@pytest.fixture(scope="module")
+def eng_q():
+    x, _ = clustered_vectors(3, 2000, 32, 8)
+    q = query_set(3, x, 37)
+    icfg = compact_index.IndexConfig(dim=32, n_clusters=8, degree=8, knn_k=16)
+    scfg = engine.SearchConfig(nprobe=2, ef=16, k=5)
+    eng = engine.PIMCQGEngine.build(jax.random.PRNGKey(0), x, icfg, scfg,
+                                    n_shards=2)
+    return eng, q
+
+
+# ---------------------------------------------------------------------------
+# bucketing / padding equivalence (engine layer)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,bucket", [(1, 8), (5, 8), (11, 16), (16, 16)])
+def test_padded_search_identical_to_unpadded(eng_q, n, bucket):
+    """Searching N queries through a bucket of size M >= N returns exactly
+    the unbucketed result — pads are masked out of routing, beam search,
+    and rerank."""
+    eng, q = eng_q
+    r0, s0 = eng.search(q[:n])
+    r1, s1 = eng.search(q[:n], pad_to=bucket)
+    np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+    # distances: different bucket shapes compile different XLA reduction
+    # orders, so exact distances agree only to float accumulation order
+    np.testing.assert_allclose(np.asarray(r0.dists), np.asarray(r1.dists),
+                               rtol=1e-5, atol=1e-4)
+    assert r1.ids.shape == (n, eng.scfg.k)          # pad rows sliced off
+    assert int(s1.dropped_lanes) == 0               # pads occupy no capacity
+
+
+def test_search_bucketed_routes_to_ladder(eng_q):
+    eng, q = eng_q
+    eng.buckets = (4, 8, 16)
+    c0 = eng.compile_count
+    for n in (1, 3, 4, 5, 7, 9, 13, 16):
+        res, _ = eng.search_bucketed(q[:n])
+        assert res.ids.shape[0] == n
+    # 8 distinct batch sizes -> at most 3 executables (one per bucket)
+    assert eng.compile_count - c0 <= 3
+    with pytest.raises(ValueError):
+        eng.search_bucketed(q[:17])
+
+
+def test_pad_to_smaller_than_batch_rejected(eng_q):
+    eng, q = eng_q
+    with pytest.raises(ValueError):
+        eng.search(q[:8], pad_to=4)
+
+
+# ---------------------------------------------------------------------------
+# route_lanes: capacity overflow and validity masking
+# ---------------------------------------------------------------------------
+
+def test_route_lanes_capacity_overflow_drops_and_flags():
+    """With capacity below the offered lane load, route_lanes must count
+    the overflow in dropped_lanes and mark those probes inv=-1 (the engine
+    surfaces this as SearchStats.dropped_lanes > 0)."""
+    rng = np.random.default_rng(0)
+    probe = jnp.asarray(rng.integers(0, 4, (12, 4), dtype=np.int32))
+    shard_of = jnp.zeros(4, jnp.int32)              # everything on shard 0
+    local_slot = jnp.asarray(np.arange(4, dtype=np.int32))
+    lane_q, lane_cl, inv, dropped = engine.route_lanes(
+        probe, shard_of, local_slot, n_shards=1, capacity=16)
+    assert int(dropped) == 12 * 4 - 16
+    inv = np.asarray(inv).reshape(-1)
+    assert (inv >= 0).sum() == 16                   # survivors keep slots
+    assert (inv == -1).sum() == int(dropped)
+    # surviving lanes are still a consistent inverse map
+    lane_q = np.asarray(lane_q).reshape(-1)
+    flat_q = np.repeat(np.arange(12), 4)
+    for probe_idx, slot in enumerate(inv):
+        if slot >= 0:
+            assert lane_q[slot] == flat_q[probe_idx]
+
+
+def test_route_lanes_valid_mask_excludes_pads():
+    """Pad queries must not occupy lane capacity, must not count as
+    dropped, and must leave real queries' lane slots unchanged."""
+    rng = np.random.default_rng(1)
+    probe = jnp.asarray(rng.integers(0, 16, (8, 4), dtype=np.int32))
+    shard_of = jnp.asarray(np.arange(16, dtype=np.int32) % 4)
+    local_slot = jnp.asarray(np.arange(16, dtype=np.int32) // 4)
+    ref = engine.route_lanes(probe[:5], shard_of, local_slot,
+                             n_shards=4, capacity=12)
+    valid = jnp.arange(8) < 5
+    got = engine.route_lanes(probe, shard_of, local_slot, valid,
+                             n_shards=4, capacity=12)
+    np.testing.assert_array_equal(np.asarray(ref[2]),
+                                  np.asarray(got[2][:5]))   # inv map equal
+    assert (np.asarray(got[2][5:]) == -1).all()             # pads dropped
+    assert int(got[3]) == int(ref[3]) == 0                  # no drops
+
+
+def test_engine_dropped_lanes_surface_in_stats():
+    """End-to-end: a tiny lane_capacity_factor forces overflow and the
+    engine must report dropped_lanes > 0 while still returning top-k."""
+    x, _ = clustered_vectors(5, 1500, 32, 8)
+    q = query_set(5, x, 16)
+    icfg = compact_index.IndexConfig(dim=32, n_clusters=8, degree=8, knn_k=16)
+    scfg = engine.SearchConfig(nprobe=4, ef=16, k=5,
+                               lane_capacity_factor=0.05)
+    eng = engine.PIMCQGEngine.build(jax.random.PRNGKey(0), x, icfg, scfg,
+                                    n_shards=2)
+    res, stats = eng.search(q)
+    assert int(stats.dropped_lanes) > 0
+    assert res.ids.shape == (16, 5)
+
+
+def test_padded_search_identical_under_overflow():
+    """Padding must not change WHICH lanes overflow: the padded executable
+    clamps its drop threshold to the capacity an unpadded batch of the
+    real queries would get, so ids and dropped_lanes match even when the
+    lane buffers overflow."""
+    x, _ = clustered_vectors(5, 1500, 32, 8)
+    q = query_set(5, x, 16)
+    icfg = compact_index.IndexConfig(dim=32, n_clusters=8, degree=8, knn_k=16)
+    scfg = engine.SearchConfig(nprobe=4, ef=16, k=5,
+                               lane_capacity_factor=0.05)
+    eng = engine.PIMCQGEngine.build(jax.random.PRNGKey(0), x, icfg, scfg,
+                                    n_shards=2)
+    for n, bucket in [(5, 16), (11, 16), (16, 32)]:
+        r0, s0 = eng.search(q[:n])
+        r1, s1 = eng.search(q[:n], pad_to=bucket)
+        np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+        assert int(s0.dropped_lanes) == int(s1.dropped_lanes) > 0
+
+
+# ---------------------------------------------------------------------------
+# StreamingScheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_matches_sync_and_leaks_no_pads(eng_q):
+    """Regression for the AsyncExecutor pad bug: padded and unpadded runs
+    must return identical ids/dists for every REAL query, with no pad rows
+    in the output and per-real-query stats."""
+    eng, q = eng_q
+    sync, _ = eng.search(q)                         # 37 queries, unpadded
+    sched = StreamingScheduler(eng, buckets=(8, 16), fill_threshold=16,
+                               wait_limit_s=1e-3, fifo_depth=2)
+    rep = sched.run(q)                              # all arrive at t=0
+    np.testing.assert_array_equal(rep.ids, np.asarray(sync.ids))
+    np.testing.assert_allclose(rep.dists, np.asarray(sync.dists),
+                               rtol=1e-5, atol=1e-4)
+    assert rep.ids.shape[0] == rep.n_queries == 37  # no pad rows leak
+    assert sum(rep.flush_sizes) == 37               # pads not counted
+    assert np.isfinite(rep.latency_s).all()
+    assert rep.qps > 0
+
+
+def test_scheduler_poisson_stream_reassembles_out_of_order(eng_q):
+    eng, q = eng_q
+    sync, _ = eng.search(q)
+    rng = np.random.default_rng(2)
+    arr = np.cumsum(rng.exponential(3e-4, len(q)))
+    sched = StreamingScheduler(eng, buckets=(4, 8, 16), fill_threshold=16,
+                               wait_limit_s=1e-3, fifo_depth=3)
+    rep = sched.run(q, arr)
+    np.testing.assert_array_equal(rep.ids, np.asarray(sync.ids))
+    assert rep.n_flushes >= 2                       # genuinely streamed
+    assert (rep.latency_s >= 0).all()
+    assert rep.p99_ms >= rep.p50_ms
+
+
+def test_scheduler_compiles_at_most_ladder(eng_q):
+    """Mixed batch sizes across a stream reuse the bucket executables: the
+    engine compiles at most len(buckets) search functions."""
+    eng, q = eng_q
+    x, _ = clustered_vectors(9, 1000, 32, 8)
+    icfg = compact_index.IndexConfig(dim=32, n_clusters=8, degree=8, knn_k=16)
+    scfg = engine.SearchConfig(nprobe=2, ef=16, k=5)
+    fresh = engine.PIMCQGEngine.build(jax.random.PRNGKey(1), x, icfg, scfg,
+                                      n_shards=2)
+    sched = StreamingScheduler(fresh, buckets=(4, 16), fill_threshold=16,
+                               wait_limit_s=5e-4)
+    rng = np.random.default_rng(3)
+    arr = np.cumsum(rng.exponential(2e-4, len(q)))
+    rep = sched.run(np.asarray(q), arr)
+    assert len(set(rep.flush_sizes)) >= 2           # sizes truly varied
+    assert fresh.compile_count <= 2                 # but 2 execs at most
+    assert rep.compiles <= 2
+
+
+def test_scheduler_adopts_engine_ladder_without_mutating_it():
+    x, _ = clustered_vectors(9, 800, 32, 8)
+    icfg = compact_index.IndexConfig(dim=32, n_clusters=8, degree=8, knn_k=16)
+    scfg = engine.SearchConfig(nprobe=2, ef=16, k=5)
+    eng = engine.PIMCQGEngine.build(jax.random.PRNGKey(1), x, icfg, scfg,
+                                    n_shards=2, buckets=(2, 8))
+    sched = StreamingScheduler(eng)
+    assert sched.buckets == (2, 8)
+    assert sched.fill_threshold == 8
+    # a second scheduler with its own ladder must not reconfigure the
+    # engine (shared state) nor the first scheduler
+    other = StreamingScheduler(eng, buckets=(4,))
+    assert eng.buckets == (2, 8)
+    assert sched.buckets == (2, 8)
+    assert other.buckets == (4,)
+    rep = other.run(np.zeros((6, 32), np.float32))   # 6 > max bucket 4:
+    assert rep.flush_sizes == [4, 2]                 # scheduler splits, ok
