@@ -1,22 +1,25 @@
 """RAG-style serving: batched LM decode + PIMCQG retrieval per request.
 
     PYTHONPATH=src python examples/rag_serve.py [--arch h2o-danube-1.8b]
+                                                [--encoder mean-pool]
 
 The paper's production position for billion-scale ANNS: a serving stack
 emits query embeddings, the PIMCQG engine (cluster filter -> in-"PU" beam
 search -> host rerank) returns neighbors, all through the streaming
 scheduler (O2's dynamic mini-batching over a shape-stable bucket ladder:
-any arrival batch size reuses one of a few jitted executables). This
-driver runs the reduced-config LM, retrieves per generated batch, and
-reports decode + retrieval throughput.
+any arrival batch size reuses one of a few jitted executables).
+
+The query embedding comes from the pluggable ``QueryEncoder`` hook in
+launch/serve.py — default is the probability-weighted mean token
+embedding; ``--encoder logit-slice`` swaps in the old stub to show the
+hook is a real seam, and any callable ``(logits) -> (B, dim) float32``
+plugs in the same way.
 """
 
 import argparse
 import time
 
-import numpy as np
-
-from repro.launch.serve import run
+from repro.launch.serve import ENCODERS, run
 
 
 def main():
@@ -25,14 +28,15 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--encoder", default="mean-pool", choices=list(ENCODERS))
     args = ap.parse_args()
     t0 = time.time()
     toks, retrieved = run(args.arch, args.requests, args.prompt_len,
-                          args.gen, rag=True)
+                          args.gen, rag=True, query_encoder=args.encoder)
     print(f"generated tokens shape: {toks.shape}")
     assert retrieved is not None and (retrieved >= 0).any()
-    print(f"retrieval wired through the async pipeline: "
-          f"{retrieved.shape[1]} neighbors/request")
+    print(f"retrieval wired through the async pipeline "
+          f"({args.encoder} encoder): {retrieved.shape[1]} neighbors/request")
     print(f"total {time.time() - t0:.1f}s")
 
 

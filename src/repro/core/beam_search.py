@@ -9,9 +9,18 @@ Static-shape, jit-compatible: fixed beam EF, fixed iteration cap, dense
 visited bitmap over the padded cluster budget M. Batched with vmap over
 lanes; distributed with shard_map in core/engine.py.
 
-Two ranking modes share the traversal skeleton:
-  * mulfree (int32 ranks)  — O3 kernel: LUT adds + shift-add (production)
-  * exact   (f32 ranks)    — node-specific cos_theta (SymphonyQG baseline)
+ONE traversal skeleton, parameterized by a ``RankingBackend``
+(core/backends.py): the backend supplies the candidate-ranking kernel, its
+rank dtype, and its pad/sentinel value. Both entry points take the same
+three runtime arguments —
+
+    shard : the vmapped single-shard view of ``engine.PlacedIndex``
+            (whole cluster stacks; lanes index them lazily so vmap never
+            materializes per-lane (M, ...) slices — the §Perf P2 pathology)
+    cl    : () i32 clipped local cluster id of this lane
+    lane  : the backend's per-lane LUT pytree (one row of ``prepare_lanes``)
+
+plus static (backend, cfg: LaneConfig).
 """
 
 from __future__ import annotations
@@ -22,86 +31,38 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import mulfree, rabitq
-from ..kernels import ops as kernel_ops
-
-INT_MAX = jnp.iinfo(jnp.int32).max
-F32_MAX = jnp.float32(jnp.finfo(jnp.float32).max)
+from .backends import LaneConfig, RankingBackend
 
 __all__ = ["BeamResult", "beam_search_lane", "full_scan_lane"]
 
 
 class BeamResult(NamedTuple):
     ids: jax.Array    # (EF,) int32 local node ids, -1 pad
-    rank: jax.Array   # (EF,) rank values (int32 or f32), pad = +max
+    rank: jax.Array   # (EF,) rank values (backend.rank_dtype), pad = +max
     hops: jax.Array   # () int32 — expansions performed (paper Fig 19 uses this)
 
 
-def _eval_mulfree(codes, f_add, cl, ids, lut, sumq, shifts, dim):
-    """Rank a gathered id set under O3. ids -1 -> INT_MAX.
+@functools.partial(jax.jit, static_argnames=("backend", "cfg"))
+def beam_search_lane(shard, cl: jax.Array, lane, *,
+                     backend: RankingBackend, cfg: LaneConfig) -> BeamResult:
+    """Greedy beam search of one lane over cluster ``cl``."""
+    m, r_deg = shard.neighbors.shape[-2:]
+    pad_rank = backend.pad_rank
+    entry = shard.entry[cl]
 
-    codes/f_add are the WHOLE shard-local stacks (Cl, M, ...) indexed
-    lazily at (cl, ids) — slicing the cluster out per lane would
-    materialize (lanes, M, ...) under vmap (the §Perf P2 pathology)."""
-    safe = jnp.clip(ids, 0)
-    sub_codes = codes[cl, safe]                   # (R, W) uint8
-    sub_f = f_add[cl, safe]                       # (R,) int32
-    r = kernel_ops.binary_ip_rank(sub_codes, sub_f, lut, sumq,
-                                  shifts.s1, shifts.s2, dim)
-    return jnp.where(ids >= 0, r, INT_MAX)
+    def rank_ids(ids):
+        return backend.rank_ids(shard, cl, ids, lane, cfg.dim)
 
-
-def _eval_exact(codes, residual_norm, cos_theta, cl, ids,
-                qlut: rabitq.QueryLUT, dim):
-    safe = jnp.clip(ids, 0)
-    sub = rabitq.RabitQCodes(codes[cl, safe], residual_norm[cl, safe],
-                             cos_theta[cl, safe], dim)
-    d = rabitq.estimate_sqdist(sub, qlut)
-    return jnp.where(ids >= 0, d.astype(jnp.float32), F32_MAX)
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("ef", "max_iters", "dim", "mode"))
-def beam_search_lane(codes, f_add, neighbors, entry, n_valid,
-                     residual_norm, cos_theta, cl,
-                     lut, sumq, shift1, shift2, qlut_f, sumq_f, qnorm_f,
-                     *, ef: int, max_iters: int, dim: int, mode: str = "mulfree"
-                     ) -> BeamResult:
-    """Search one lane over cluster `cl` of the shard-local stacks.
-
-    codes (Cl, M, W) uint8; f_add (Cl, M) i32; neighbors (Cl, M, R) i32;
-    entry () i32 (already per-cluster); lut (Dpad,) i32 / qlut_f (Dpad,)
-    f32 depending on mode.
-    """
-    m, r_deg = neighbors.shape[-2:]
-    if mode == "mulfree":
-        shifts = mulfree.AlphaShifts(shift1, shift2, jnp.float32(0))
-        def rank_ids(ids):
-            return _eval_mulfree(codes, f_add, cl, ids, lut, sumq, shifts,
-                                 dim)
-        pad_rank = INT_MAX
-        rdtype = jnp.int32
-    elif mode == "exact":
-        q = rabitq.QueryLUT(qlut_f, sumq_f, qnorm_f)
-        def rank_ids(ids):
-            return _eval_exact(codes, residual_norm, cos_theta, cl, ids, q,
-                               dim)
-        pad_rank = F32_MAX
-        rdtype = jnp.float32
-    else:
-        raise ValueError(mode)
-
-    beam_ids = jnp.full((ef,), -1, jnp.int32).at[0].set(entry)
-    beam_rank = jnp.full((ef,), pad_rank, rdtype).at[0].set(
+    beam_ids = jnp.full((cfg.ef,), -1, jnp.int32).at[0].set(entry)
+    beam_rank = jnp.full((cfg.ef,), pad_rank, backend.rank_dtype).at[0].set(
         rank_ids(entry[None])[0])
-    expanded = jnp.zeros((ef,), bool)
+    expanded = jnp.zeros((cfg.ef,), bool)
     visited = jnp.zeros((m,), bool).at[entry].set(True)
 
     def cond(state):
         i, _, beam_rank, expanded, _ = state
         frontier = jnp.where(expanded, pad_rank, beam_rank)
-        return (i < max_iters) & (jnp.min(frontier) < pad_rank)
+        return (i < cfg.max_iters) & (jnp.min(frontier) < pad_rank)
 
     def body(state):
         i, beam_ids, beam_rank, expanded, visited = state
@@ -111,23 +72,18 @@ def beam_search_lane(codes, f_add, neighbors, entry, n_valid,
         expanded = expanded.at[sel].set(True)
         node = beam_ids[sel]
 
-        nbrs = neighbors[cl, jnp.clip(node, 0)]                 # (R,)
+        nbrs = shard.neighbors[cl, jnp.clip(node, 0)]           # (R,)
         fresh = (nbrs >= 0) & ~visited[jnp.clip(nbrs, 0)] & (node >= 0)
         nbrs = jnp.where(fresh, nbrs, -1)
         visited = visited.at[jnp.clip(nbrs, 0)].set(
             visited[jnp.clip(nbrs, 0)] | (nbrs >= 0))
         nrank = rank_ids(nbrs)                                  # (R,)
 
-        # merge beam + neighbors, keep best EF (ascending rank)
+        # merge beam + neighbors, keep best EF (ascending rank; EF+R tiny)
         all_ids = jnp.concatenate([beam_ids, nbrs])
         all_rank = jnp.concatenate([beam_rank, nrank])
         all_exp = jnp.concatenate([expanded, jnp.zeros((r_deg,), bool)])
-        if rdtype == jnp.int32:
-            # stable integer top-k via sort (EF+R is tiny)
-            order = jnp.argsort(all_rank)
-        else:
-            order = jnp.argsort(all_rank)
-        take = order[:ef]
+        take = jnp.argsort(all_rank)[:cfg.ef]
         return (i + 1, all_ids[take], all_rank[take], all_exp[take], visited)
 
     state = (jnp.int32(0), beam_ids, beam_rank, expanded, visited)
@@ -135,25 +91,15 @@ def beam_search_lane(codes, f_add, neighbors, entry, n_valid,
     return BeamResult(beam_ids, beam_rank, hops)
 
 
-@functools.partial(jax.jit, static_argnames=("ef", "dim", "mode"))
-def full_scan_lane(codes, f_add, n_valid, residual_norm, cos_theta,
-                   lut, sumq, shift1, shift2, qlut_f, sumq_f, qnorm_f,
-                   *, ef: int, dim: int, mode: str = "mulfree") -> BeamResult:
+@functools.partial(jax.jit, static_argnames=("backend", "cfg"))
+def full_scan_lane(shard, cl: jax.Array, lane, *,
+                   backend: RankingBackend, cfg: LaneConfig) -> BeamResult:
     """GEMV-mode scan of the whole cluster (paper §V-E2 projects PIMCQG onto
     PIM-HBM/AiM with exactly this kernel shape) — also the oracle that bounds
     what beam search can find inside a cluster."""
-    m = codes.shape[0]
-    node_valid = jnp.arange(m) < n_valid
-    if mode == "mulfree":
-        shifts = mulfree.AlphaShifts(shift1, shift2, jnp.float32(0))
-        r = kernel_ops.binary_ip_rank(codes, f_add, lut, sumq,
-                                      shifts.s1, shifts.s2, dim)
-        r = jnp.where(node_valid, r, INT_MAX)
-        neg, ids = jax.lax.top_k(-r, ef)
-        return BeamResult(ids.astype(jnp.int32), -neg, jnp.int32(m))
-    q = rabitq.QueryLUT(qlut_f, sumq_f, qnorm_f)
-    all_codes = rabitq.RabitQCodes(codes, residual_norm, cos_theta, dim)
-    d = rabitq.estimate_sqdist(all_codes, q).astype(jnp.float32)
-    d = jnp.where(node_valid, d, F32_MAX)
-    neg, ids = jax.lax.top_k(-d, ef)
+    m = shard.codes.shape[-2]
+    node_valid = jnp.arange(m) < shard.n_valid[cl]
+    r = backend.rank_cluster(shard, cl, lane, cfg.dim)          # (M,)
+    r = jnp.where(node_valid, r, backend.pad_rank)
+    neg, ids = jax.lax.top_k(-r, cfg.ef)
     return BeamResult(ids.astype(jnp.int32), -neg, jnp.int32(m))

@@ -15,6 +15,13 @@ onto one PU / mesh shard. Clusters are padded to a common node budget so the
 whole index is a stack of dense arrays — jit/shard_map friendly, and the
 padding is exactly the PU-local memory budget headroom the placement step
 (core/placement.py) manages.
+
+``CompactIndex`` is the OFFLINE build product and deliberately carries the
+union of every backend's per-node/per-cluster metadata (construction
+computes it all anyway: O3 calibration needs the exact-mode tables). The
+DEPLOYED layout (engine.PlacedIndex) carries only the shared graph arrays
+plus the active ``RankingBackend``'s own slice — each backend's
+``index_arrays`` (core/backends.py) selects its fields from here.
 """
 
 from __future__ import annotations
@@ -67,7 +74,7 @@ class CompactIndex(NamedTuple):
     shift1: jax.Array       # (C,) int32 — shift-add exponents for 1/alpha
     shift2: jax.Array       # (C,) int32
     # SymphonyQG-mode per-node factor tables (NOT counted in the compact
-    # footprint; kept for the exact-mode baseline & ablations, Fig 9/17)
+    # footprint; deployed only when ExactBackend is active, Fig 9/17)
     residual_norm: jax.Array  # (C, M) f32
     cos_theta: jax.Array      # (C, M) f32
     rotation: jax.Array       # (D, D) f32 — shared random rotation

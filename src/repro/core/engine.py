@@ -11,6 +11,13 @@ work; lanes are routed to the shard owning their cluster. Raw vectors (the
 "host store") never live on the model axis — they are sharded over the
 data axis for the rerank stage.
 
+The candidate-ranking variant is a ``RankingBackend`` (core/backends.py)
+selected by ``SearchConfig.mode`` (a registry key; "mulfree" / "exact"
+keep their historical meaning). ``PlacedIndex`` is a registered pytree:
+shared graph arrays plus the active backend's own array slice, flowing
+WHOLE through vmap/shard_map — no positional splatting, no dummy arrays
+for inactive modes.
+
 The whole path is one jit-able function with static shapes, so it lowers
 under the production mesh for the multi-pod dry-run.
 """
@@ -19,16 +26,18 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import beam_search, compact_index, ivf, mulfree, placement as placement_mod
-from . import rabitq, rerank as rerank_mod
+from . import backends as backends_mod
+from . import beam_search, compact_index, ivf, placement as placement_mod
+from . import rerank as rerank_mod
 
-__all__ = ["SearchConfig", "PlacedIndex", "PIMCQGEngine", "SearchStats"]
+__all__ = ["SearchConfig", "PlacedIndex", "PIMCQGEngine", "SearchStats",
+           "placed_specs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,26 +46,29 @@ class SearchConfig:
     ef: int = 40              # over-fetched candidate set size (EF > n_b)
     k: int = 10
     max_iters: int = 64       # beam-expansion cap per lane
-    mode: str = "mulfree"     # 'mulfree' (O3) | 'exact' (SymphonyQG baseline)
+    mode: str = "mulfree"     # RankingBackend registry key ('mulfree' = O3,
+                              # 'exact' = SymphonyQG baseline, 'hamming', ...)
     scan: str = "beam"        # 'beam' | 'gemv' (full-cluster scan, Fig 19)
     lane_capacity_factor: float = 2.0  # per-shard lane buffer headroom
 
 
-class PlacedIndex(NamedTuple):
-    """CompactIndex reshaped to shard-major (S, C/S, ...) layout."""
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PlacedIndex:
+    """Deployment layout: shard-major (S, C/S, ...) cluster stacks.
+
+    Shared graph/code arrays + ``arrays``, the active backend's own
+    per-node/per-cluster slice (its registered pytree dataclass). Under
+    ``jax.vmap(..., in_axes=0)`` the same class doubles as the single-shard
+    view (leading dim (C/S,)) that beam_search/full_scan lanes index lazily.
+    """
     centroids: jax.Array   # (S, Cl, D) f32
-    codes: jax.Array       # (S, Cl, M, W) u8
-    f_add: jax.Array       # (S, Cl, M) i32
+    codes: jax.Array       # (S, Cl, M, W) u8 — canonical RabitQ sign codes
     neighbors: jax.Array   # (S, Cl, M, R) i32
     entry: jax.Array       # (S, Cl) i32
     n_valid: jax.Array     # (S, Cl) i32
     node_ids: jax.Array    # (S, Cl, M) i32
-    residual_norm: jax.Array  # (S, Cl, M) f32
-    cos_theta: jax.Array      # (S, Cl, M) f32
-    alpha: jax.Array       # (S, Cl) f32
-    rho: jax.Array         # (S, Cl) f32
-    shift1: jax.Array      # (S, Cl) i32
-    shift2: jax.Array      # (S, Cl) i32
+    arrays: Any            # backend-owned pytree, (S, Cl, ...) leading
 
 
 class SearchStats(NamedTuple):
@@ -64,17 +76,36 @@ class SearchStats(NamedTuple):
     dropped_lanes: jax.Array  # () i32 — lanes lost to buffer overflow
 
 
-def _place(idx: compact_index.CompactIndex, pl: placement_mod.Placement) -> PlacedIndex:
+def _place(idx: compact_index.CompactIndex, pl: placement_mod.Placement,
+           backend: backends_mod.RankingBackend) -> PlacedIndex:
     def rs(a):
         a = np.asarray(a)[pl.order]
         return jnp.asarray(a.reshape(pl.n_shards, pl.per_shard, *a.shape[1:]))
     return PlacedIndex(
-        centroids=rs(idx.centroids),
-        codes=rs(idx.codes), f_add=rs(idx.f_add), neighbors=rs(idx.neighbors),
-        entry=rs(idx.entry), n_valid=rs(idx.n_valid), node_ids=rs(idx.node_ids),
-        residual_norm=rs(idx.residual_norm), cos_theta=rs(idx.cos_theta),
-        alpha=rs(idx.alpha), rho=rs(idx.rho),
-        shift1=rs(idx.shift1), shift2=rs(idx.shift2),
+        centroids=rs(idx.centroids), codes=rs(idx.codes),
+        neighbors=rs(idx.neighbors), entry=rs(idx.entry),
+        n_valid=rs(idx.n_valid), node_ids=rs(idx.node_ids),
+        arrays=jax.tree.map(rs, backend.index_arrays(idx)),
+    )
+
+
+def placed_specs(n_shards: int, clusters_per_shard: int, budget: int,
+                 degree: int, dim: int,
+                 backend: backends_mod.RankingBackend) -> PlacedIndex:
+    """ShapeDtypeStruct stand-ins for the PIM-resident compact index —
+    abstract lowering (launch/anns_step.py) builds exactly the tree
+    ``_place`` would, including the backend's slice, without 10^9 nodes."""
+    f = jax.ShapeDtypeStruct
+    lead = (n_shards, clusters_per_shard)
+    w = (dim + ((-dim) % 8)) // 8
+    return PlacedIndex(
+        centroids=f((*lead, dim), jnp.float32),
+        codes=f((*lead, budget, w), jnp.uint8),
+        neighbors=f((*lead, budget, degree), jnp.int32),
+        entry=f(lead, jnp.int32),
+        n_valid=f(lead, jnp.int32),
+        node_ids=f((*lead, budget), jnp.int32),
+        arrays=backend.array_specs(lead, budget, dim),
     )
 
 
@@ -148,68 +179,33 @@ def route_lanes(probe_cids: jax.Array, shard_of: jax.Array, local_slot: jax.Arra
 # In-shard search (the "PU program")
 # ---------------------------------------------------------------------------
 
-def _lane_luts(queries, lane_q, centroids_l, lane_cl, rotation, rho_l, dim, mode):
-    """Dispatch-stage LUT prep for every lane of one shard (vectorized)."""
-    safe_q = jnp.clip(lane_q, 0)
-    safe_c = jnp.clip(lane_cl, 0)
-    qv = queries[safe_q]                                  # (L, D)
-    cv = centroids_l[safe_c]                              # (L, D)
-    if mode == "mulfree":
-        def prep(qi, ci, rho):
-            consts = mulfree.ClusterConstants(
-                jnp.float32(0), rho, mulfree.AlphaShifts(
-                    jnp.int32(0), jnp.int32(0), jnp.float32(0)))
-            return mulfree.prepare_int_lut(qi, ci, rotation, consts, dim)
-        lut, sumq = jax.vmap(prep)(qv, cv, rho_l[safe_c])
-        zf = jnp.zeros((lane_q.shape[0], lut.shape[-1]), jnp.float32)
-        return lut, sumq, zf, jnp.zeros_like(sumq, jnp.float32), \
-            jnp.zeros_like(sumq, jnp.float32)
-    qlut = jax.vmap(lambda qi, ci: rabitq.prepare_query(qi, ci, rotation))(qv, cv)
-    pad = (-dim) % 8
-    g = jnp.pad(qlut.lut, ((0, 0), (0, pad))) if pad else qlut.lut
-    zi = jnp.zeros((lane_q.shape[0], g.shape[-1]), jnp.int32)
-    return zi, jnp.zeros((lane_q.shape[0],), jnp.int32), g, qlut.sum_lut, \
-        qlut.query_norm
-
-
 def _make_shard_search(cfg: SearchConfig, dim: int):
-    """Returns f(shard_index_arrays..., queries, lane_q, lane_cl, centroids_l,
-    rotation) -> (gids (L, EF), rank (L, EF), hops (L,)) for ONE shard."""
+    """Returns f(shard: PlacedIndex-view, rotation, queries, lane_q, lane_cl)
+    -> (gids (L, EF), rank (L, EF), hops (L,)) for ONE shard. The backend
+    is resolved once from the registry; its lane-LUT pytree flows whole
+    through the inner vmap."""
+    backend = backends_mod.get_backend(cfg.mode)
+    lane_cfg = backends_mod.LaneConfig(ef=cfg.ef, max_iters=cfg.max_iters,
+                                       dim=dim)
+    scan_lane = beam_search.full_scan_lane if cfg.scan == "gemv" \
+        else beam_search.beam_search_lane
 
-    def shard_search(pi_codes, pi_f_add, pi_neighbors, pi_entry, pi_n_valid,
-                     pi_node_ids, pi_rnorm, pi_ctheta, pi_rho,
-                     pi_s1, pi_s2, centroids_l, rotation,
-                     queries, lane_q, lane_cl):
-        lut, sumq, glutf, sumqf, qnormf = _lane_luts(
-            queries, lane_q, centroids_l, lane_cl, rotation, pi_rho, dim,
-            cfg.mode)
+    def shard_search(shard: PlacedIndex, rotation, queries, lane_q, lane_cl):
+        safe_q = jnp.clip(lane_q, 0)
+        safe_c = jnp.clip(lane_cl, 0)
+        lanes = backend.prepare_lanes(
+            queries[safe_q], shard.centroids[safe_c], rotation,
+            shard.arrays, safe_c, dim)
 
-        def one_lane(cl, lut_i, sumq_i, gf_i, sumqf_i, qnormf_i):
+        def one_lane(cl, lane):
             c = jnp.clip(cl, 0)
-            if cfg.scan == "gemv":
-                res = beam_search.full_scan_lane(
-                    pi_codes[c], pi_f_add[c], pi_n_valid[c],
-                    pi_rnorm[c], pi_ctheta[c],
-                    lut_i, sumq_i, pi_s1[c], pi_s2[c],
-                    gf_i, sumqf_i, qnormf_i,
-                    ef=cfg.ef, dim=dim, mode=cfg.mode)
-            else:
-                # pass the WHOLE shard-local stacks + the cluster index:
-                # per-lane slicing would materialize (lanes, M, ...) under
-                # vmap (§Perf P2)
-                res = beam_search.beam_search_lane(
-                    pi_codes, pi_f_add, pi_neighbors, pi_entry[c],
-                    pi_n_valid[c], pi_rnorm, pi_ctheta, c,
-                    lut_i, sumq_i, pi_s1[c], pi_s2[c],
-                    gf_i, sumqf_i, qnormf_i,
-                    ef=cfg.ef, max_iters=cfg.max_iters, dim=dim,
-                    mode=cfg.mode)
+            res = scan_lane(shard, c, lane, backend=backend, cfg=lane_cfg)
             live = cl >= 0
-            gids = pi_node_ids[c, jnp.clip(res.ids, 0)]
+            gids = shard.node_ids[c, jnp.clip(res.ids, 0)]
             gids = jnp.where((res.ids >= 0) & live, gids, -1)
             return gids, res.rank, jnp.where(live, res.hops, 0)
 
-        return jax.vmap(one_lane)(lane_cl, lut, sumq, glutf, sumqf, qnormf)
+        return jax.vmap(one_lane)(lane_cl, lanes)
 
     return shard_search
 
@@ -234,7 +230,8 @@ class PIMCQGEngine:
         self.place = place
         self.icfg = icfg
         self.scfg = scfg
-        self.placed = _place(index, place)
+        self.backend = backends_mod.get_backend(scfg.mode)
+        self.placed = _place(index, place, self.backend)
         self.shard_of = jnp.asarray(place.shard_of)
         self.local_slot = jnp.asarray(place.local_slot)
         self._search_cache: dict = {}
@@ -278,13 +275,10 @@ class PIMCQGEngine:
             lane_q, lane_cl, inv, dropped = route_lanes(
                 probe, self.shard_of, self.local_slot, valid, cap_valid,
                 n_shards=s, capacity=capacity)
-            cent_l = placed.centroids                        # (S, Cl, D)
+            # the whole PlacedIndex pytree maps over its shard axis at once
             gids, rank, hops = jax.vmap(
-                shard_fn, in_axes=(0,) * 12 + (None, None, 0, 0))(
-                placed.codes, placed.f_add, placed.neighbors, placed.entry,
-                placed.n_valid, placed.node_ids, placed.residual_norm,
-                placed.cos_theta, placed.rho, placed.shift1, placed.shift2,
-                cent_l, rotation, queries, lane_q, lane_cl)
+                shard_fn, in_axes=(0, None, None, 0, 0))(
+                placed, rotation, queries, lane_q, lane_cl)
             # gather candidates back per query via the inverse lane map
             flat_gids = gids.reshape(s * capacity, cfg.ef)
             safe = jnp.clip(inv, 0)                          # (Q, P)

@@ -25,6 +25,11 @@ Two PU-side evaluation modes, both implemented in kernels/binary_ip.py:
   * ``exact``    — SymphonyQG mode: per-node cos_theta & norm tables,
                    fp multiply per node (the baseline Fig 17 compares against).
 
+At query time these are ``RankingBackend`` implementations
+(core/backends.py: MulFreeBackend / ExactBackend); this module keeps the
+calibration math, the host-side LUT prep the backends call, and the
+reference rank evaluations (oracles for the Pallas kernels).
+
 TPU adaptation note (DESIGN.md §2): the MXU makes multiplies cheap, but this
 transform still (a) removes the per-node factor tables from the VMEM working
 set, (b) keeps the inner loop in int8/int32, and (c) makes the epilogue a

@@ -360,6 +360,7 @@ class StreamReport:
     flush_sizes: list
     compiles: int            # search executables built during this run
     makespan_s: float
+    backend: str = ""        # engine's RankingBackend registry key
 
 
 class StreamingScheduler:
@@ -494,4 +495,5 @@ class StreamingScheduler:
             p99_ms=float(np.percentile(lat, 99)) * 1e3 if n else 0.0,
             n_queries=n, n_flushes=len(flush_sizes), flush_sizes=flush_sizes,
             compiles=self.engine.compile_count - compiles0,
-            makespan_s=makespan)
+            makespan_s=makespan,
+            backend=getattr(getattr(self.engine, "scfg", None), "mode", ""))

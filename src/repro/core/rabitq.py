@@ -39,6 +39,7 @@ __all__ = [
     "random_rotation",
     "encode",
     "prepare_query",
+    "sign_code",
     "estimate_inner",
     "estimate_sqdist",
     "pack_codes",
@@ -123,6 +124,25 @@ def prepare_query(q: jax.Array, centroid: jax.Array, rotation: jax.Array) -> Que
     qnorm = jnp.linalg.norm(resid)
     g = (resid / jnp.maximum(qnorm, 1e-12)) @ rotation
     return QueryLUT(g, jnp.sum(g), qnorm)
+
+
+@functools.partial(jax.jit, static_argnames=("dim",))
+def sign_code(q: jax.Array, centroid: jax.Array, rotation: jax.Array, *,
+              dim: int) -> jax.Array:
+    """Packed sign code of the rotated query residual, (Dpad//8,) uint8.
+
+    This is the query encoded EXACTLY like the nodes (rabitq.encode minus
+    the factor terms) — the entire lane payload of the sign-only Hamming
+    pre-rank backend (core/backends.py). Padded dims are zero bits, so a
+    node's padded dims (also zero) XOR to 0 and stay inert.
+    """
+    resid = q - centroid
+    g = (resid / jnp.maximum(jnp.linalg.norm(resid), 1e-12)) @ rotation
+    bits = g > 0
+    pad = (-dim) % 8
+    if pad:
+        bits = jnp.pad(bits, (0, pad))
+    return pack_codes(bits)
 
 
 def binary_dot(packed: jax.Array, lut: jax.Array, dim: int) -> jax.Array:

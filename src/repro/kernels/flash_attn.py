@@ -40,9 +40,11 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, bk: int, causal: bool,
 
     def body(j, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.ds(j * bk, bk), slice(None))
+        # leading index must be a traced scalar: current pallas interpret
+        # mode rejects a bare python int inside a pl.load index tuple
+        k = pl.load(k_ref, (jnp.int32(0), pl.ds(j * bk, bk), slice(None))
                     ).astype(jnp.float32)                 # (BK, dk)
-        v = pl.load(v_ref, (0, pl.ds(j * bk, bk), slice(None))
+        v = pl.load(v_ref, (jnp.int32(0), pl.ds(j * bk, bk), slice(None))
                     ).astype(jnp.float32)                 # (BK, dv)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)

@@ -1,6 +1,8 @@
 """Public jit'd wrappers over the Pallas kernels.
 
-Dispatch policy:
+Dispatch policy (``prefer_kernel`` below — the single owner of the
+Pallas-vs-ref choice; ``core.backends.MulFreeBackend.ranker`` and the
+wrappers here both consult it):
   * On TPU the Pallas kernels run compiled (interpret=False).
   * On CPU (this container) the same kernels run in interpret mode when
     ``REPRO_FORCE_PALLAS=1`` (kernel tests / benchmarks); otherwise the
@@ -20,7 +22,8 @@ import jax.numpy as jnp
 from . import binary_ip as _k
 from . import ref as _ref
 
-__all__ = ["binary_ip_rank", "cluster_scan_topk", "kernels_enabled"]
+__all__ = ["binary_ip_rank", "cluster_scan_topk", "kernels_enabled",
+           "prefer_kernel"]
 
 _KERNEL_MIN_ROWS = 256  # below this, XLA-fused ref path wins even on TPU
 
@@ -31,15 +34,22 @@ def kernels_enabled() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def prefer_kernel(n_rows: int) -> bool:
+    """True when an n_rows-sized rank/scan should take the Pallas kernel."""
+    return kernels_enabled() and n_rows >= _KERNEL_MIN_ROWS
+
+
 def binary_ip_rank(codes: jax.Array, f_add: jax.Array, lut: jax.Array,
                    sumq: jax.Array, s1: jax.Array, s2: jax.Array,
                    dim: int) -> jax.Array:
-    """O3 mulfree rank of N nodes. See kernels/ref.py for exact semantics."""
-    n = codes.shape[0]
-    if kernels_enabled() and n >= _KERNEL_MIN_ROWS:
-        return _k.binary_ip_rank(codes, f_add, lut, sumq, s1, s2, dim=dim,
-                                 interpret=jax.default_backend() != "tpu")
-    return _ref.binary_ip_rank_ref(codes, f_add, lut, sumq, s1, s2, dim)
+    """O3 mulfree rank of N nodes. See kernels/ref.py for exact semantics.
+
+    Thin alias for ``MulFreeBackend.ranker`` (the backend owns its kernel;
+    bound to the class, not the registry, so replacing the registered
+    'mulfree' entry cannot change this wrapper's semantics)."""
+    from ..core import backends  # deferred: kernels must not import core eagerly
+    return backends.MulFreeBackend().ranker(
+        codes, f_add, lut, sumq, s1, s2, dim)
 
 
 def cluster_scan_topk(codes: jax.Array, f_add: jax.Array, lut: jax.Array,
@@ -47,8 +57,7 @@ def cluster_scan_topk(codes: jax.Array, f_add: jax.Array, lut: jax.Array,
                       n_valid: jax.Array, *, dim: int, ef: int
                       ) -> tuple[jax.Array, jax.Array]:
     """Fused GEMV-mode cluster scan + top-EF."""
-    n = codes.shape[0]
-    if kernels_enabled() and n >= _KERNEL_MIN_ROWS:
+    if prefer_kernel(codes.shape[0]):
         return _k.cluster_scan(codes, f_add, lut, sumq, s1, s2, n_valid,
                                dim=dim, ef=ef,
                                interpret=jax.default_backend() != "tpu")

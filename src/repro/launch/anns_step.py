@@ -22,8 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..core import backends as backends_mod
 from ..core import compact_index, engine, ivf, rerank as rerank_mod
-from ..core.beam_search import beam_search_lane, full_scan_lane
 from ..core.engine import _make_shard_search, route_lanes
 from ..distributed import sharding as shard_lib
 
@@ -49,27 +49,16 @@ class AnnsScale:
         return self.dim + ((-self.dim) % 8)
 
 
-def index_specs(s: AnnsScale, n_shards: int):
+def index_specs(s: AnnsScale, n_shards: int, mode: str = "mulfree"):
     """ShapeDtypeStruct stand-ins for the PIM-resident compact index,
-    shard-major (S, C/S, ...) exactly like engine.PlacedIndex."""
+    shard-major (S, C/S, ...) exactly like engine.PlacedIndex — built by
+    the same ``engine.placed_specs`` helper, so the lowered tree always
+    matches what ``_place`` produces (the backend contributes its own
+    array slice; no per-field duplication here)."""
     cs = s.n_clusters // n_shards
-    w = s.dim_padded // 8
     f = jax.ShapeDtypeStruct
-    placed = engine.PlacedIndex(
-        centroids=f((n_shards, cs, s.dim), jnp.float32),
-        codes=f((n_shards, cs, s.budget, w), jnp.uint8),
-        f_add=f((n_shards, cs, s.budget), jnp.int32),
-        neighbors=f((n_shards, cs, s.budget, s.degree), jnp.int32),
-        entry=f((n_shards, cs), jnp.int32),
-        n_valid=f((n_shards, cs), jnp.int32),
-        node_ids=f((n_shards, cs, s.budget), jnp.int32),
-        residual_norm=f((n_shards, cs, s.budget), jnp.float32),
-        cos_theta=f((n_shards, cs, s.budget), jnp.float32),
-        alpha=f((n_shards, cs), jnp.float32),
-        rho=f((n_shards, cs), jnp.float32),
-        shift1=f((n_shards, cs), jnp.int32),
-        shift2=f((n_shards, cs), jnp.int32),
-    )
+    placed = engine.placed_specs(n_shards, cs, s.budget, s.degree, s.dim,
+                                 backends_mod.get_backend(mode))
     host = dict(
         vectors=f((s.n, s.dim), jnp.float32),
         centroids=f((s.n_clusters, s.dim), jnp.float32),
@@ -138,7 +127,8 @@ def sharded_rerank(queries, cand_ids, vectors, mesh, *, n_total: int,
 
 
 def build_search_step(s: AnnsScale, n_shards: int, scan: str = "beam",
-                      mesh=None, owner_rerank: bool = False):
+                      mesh=None, owner_rerank: bool = False,
+                      mode: str = "mulfree"):
     """search_step(placed, centroids, rotation, vectors, queries[, n_valid])
     — same function PIMCQGEngine jits, with round-robin placement maps.
 
@@ -147,7 +137,7 @@ def build_search_step(s: AnnsScale, n_shards: int, scan: str = "beam",
     s.queries masks its pad lanes out of routing/search/rerank, so one
     compiled program serves every arrival size up to the bucket."""
     scfg = engine.SearchConfig(nprobe=s.nprobe, ef=s.ef, k=s.k,
-                               max_iters=s.max_iters, scan=scan)
+                               max_iters=s.max_iters, scan=scan, mode=mode)
     shard_of = jnp.asarray(np.arange(s.n_clusters, dtype=np.int32)
                            % n_shards)
     local_slot = jnp.asarray(np.arange(s.n_clusters, dtype=np.int32)
@@ -164,11 +154,8 @@ def build_search_step(s: AnnsScale, n_shards: int, scan: str = "beam",
             probe, shard_of, local_slot, valid, n_shards=n_shards,
             capacity=capacity)
         gids, rank, hops = jax.vmap(
-            shard_fn, in_axes=(0,) * 12 + (None, None, 0, 0))(
-            placed.codes, placed.f_add, placed.neighbors, placed.entry,
-            placed.n_valid, placed.node_ids, placed.residual_norm,
-            placed.cos_theta, placed.rho, placed.shift1, placed.shift2,
-            placed.centroids, rotation, queries, lane_q, lane_cl)
+            shard_fn, in_axes=(0, None, None, 0, 0))(
+            placed, rotation, queries, lane_q, lane_cl)
         flat_gids = gids.reshape(n_shards * capacity, s.ef)
         safe = jnp.clip(inv, 0)
         cand = flat_gids[safe]
@@ -197,15 +184,18 @@ def model_flops(s: AnnsScale, hops_est: int = 32) -> float:
 
 
 def lower_anns(mesh, s: AnnsScale | None = None, scan: str = "beam",
-               owner_rerank: bool = False, masked: bool = False):
+               owner_rerank: bool = False, masked: bool = False,
+               mode: str = "mulfree"):
     """Lower the billion-scale search step under `mesh`; returns lowered.
 
     masked=True lowers the shape-stable serving variant: the executable
     takes a replicated n_valid scalar so partially-filled (bucketed) query
-    batches reuse this one compiled program."""
+    batches reuse this one compiled program. ``mode`` picks the ranking
+    backend (any registered name lowers — the PIM-resident footprint is
+    exactly the backend's array slice)."""
     s = s or AnnsScale()
     n_shards = mesh.shape["model"]
-    placed, host = index_specs(s, n_shards)
+    placed, host = index_specs(s, n_shards, mode)
     pspec = placed_index_spec_tree(placed)
     with mesh, shard_lib.use_mesh(mesh):
         p_shard = jax.tree.map(
@@ -221,7 +211,7 @@ def lower_anns(mesh, s: AnnsScale | None = None, scan: str = "beam",
                 mesh, P(DP, None), host["queries"].shape)),
         )
         fn = build_search_step(s, n_shards, scan=scan, mesh=mesh,
-                               owner_rerank=owner_rerank)
+                               owner_rerank=owner_rerank, mode=mode)
         in_sh = (p_shard, h_shard["centroids"], h_shard["rotation"],
                  h_shard["vectors"], h_shard["queries"])
         args = (placed, host["centroids"], host["rotation"],
@@ -249,8 +239,13 @@ def main():
     from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
     from .roofline import RooflineTerms
 
+    from ..core import backends as backends_mod
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--scan", default="beam", choices=["beam", "gemv"])
+    ap.add_argument("--mode", default="mulfree",
+                    choices=list(backends_mod.available_backends()),
+                    help="ranking backend (registry key)")
     ap.add_argument("--mesh", default="both",
                     choices=["single", "multi", "both"])
     ap.add_argument("--owner-rerank", action="store_true")
@@ -268,7 +263,7 @@ def main():
         t0 = time.time()
         lowered, s = lower_anns(mesh, scan=args.scan,
                                 owner_rerank=args.owner_rerank,
-                                masked=args.masked)
+                                masked=args.masked, mode=args.mode)
         compiled = lowered.compile()
         totals = hlo_stats.weighted_totals(compiled.as_text())
         chips = mesh.size
@@ -286,6 +281,7 @@ def main():
         except Exception as e:                              # noqa: BLE001
             mem["error"] = str(e)
         variant = f"serve_b1_{args.scan}" + \
+            (f"_{args.mode}" if args.mode != "mulfree" else "") + \
             ("_ownrr" if args.owner_rerank else "") + \
             ("_masked" if args.masked else "")
         rec = dict(arch="pimcqg-engine", shape=variant,

@@ -26,6 +26,18 @@ import dataclasses
 import re
 from collections import defaultdict
 
+
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize Compiled.cost_analysis() across JAX versions.
+
+    Older JAX returned a list with one properties-dict per executable
+    module; current JAX returns the dict directly. Callers always want the
+    flat {property: value} mapping for the (single) module."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,

@@ -3,18 +3,24 @@
     PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
         --requests 16 --prompt-len 64 --gen 32 [--rag]
 
---rag wires the paper's engine into the decode loop: each request batch's
-final hidden state (mean-pooled logits embedding here, as the stub query
-encoder) becomes a query stream into the PIMCQG streaming scheduler
-(dynamic mini-batching over a shape-stable bucket ladder + host rerank),
-demonstrating the retrieval substrate in its production position.
-examples/rag_serve.py drives this path.
+--rag wires the paper's engine into the decode loop through a pluggable
+QUERY ENCODER (callable protocol, below): each decode step's logits are
+turned into a (B, dim) query batch that streams into the PIMCQG
+streaming scheduler (dynamic mini-batching over a shape-stable bucket
+ladder + host rerank), demonstrating the retrieval substrate in its
+production position. The default encoder mean-pools the logits over
+positions and takes the probability-weighted token embedding (a real
+model embedding, not a logit slice); pass any ``QueryEncoder`` callable
+— or an ``ENCODERS`` registry name, resolved inside ``run`` where the
+engine dim is known — to ``run(..., query_encoder=...)`` to swap it.
+examples/rag_serve.py drives this path and demonstrates the swap.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Callable, Protocol
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +33,61 @@ from ..data.synthetic import clustered_vectors
 from ..models.model import build_model
 
 
+class QueryEncoder(Protocol):
+    """Maps decode-step logits to retrieval queries.
+
+    __call__(logits (B, T, vocab) f32-like) -> (B, dim) np.float32 —
+    one query embedding per in-flight request, in the engine's vector
+    space dimension."""
+
+    def __call__(self, logits: jax.Array) -> np.ndarray: ...
+
+
+def mean_pool_encoder(params, dim: int) -> QueryEncoder:
+    """Default encoder: probability-weighted mean token embedding.
+
+    Mean-pools the logits over positions, softmaxes over the vocab, and
+    takes the expected row of the model's own embedding table — a real
+    (if simple) model embedding of the decode state, truncated to the
+    engine's ``dim`` and L2-normalized. Requires ``params['embed']``
+    ((vocab, d_model), true of every arch here)."""
+    emb = params["embed"]
+    if emb.shape[-1] < dim:
+        raise ValueError(f"d_model {emb.shape[-1]} < engine dim {dim}")
+
+    @jax.jit
+    def _enc(logits):
+        p = jax.nn.softmax(jnp.mean(logits.astype(jnp.float32), axis=1), -1)
+        e = p @ emb.astype(jnp.float32)[:p.shape[-1]]     # (B, d_model)
+        e = e[:, :dim]
+        return e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True),
+                               1e-6)
+
+    def encode(logits: jax.Array) -> np.ndarray:
+        return np.asarray(_enc(logits), np.float32)
+
+    return encode
+
+
+def logit_slice_encoder(dim: int) -> QueryEncoder:
+    """The historical stub (first ``dim`` logits of position 0), kept as a
+    named alternative encoder — and as proof the hook is pluggable."""
+    def encode(logits: jax.Array) -> np.ndarray:
+        return np.asarray(logits[:, 0, :dim], np.float32)
+    return encode
+
+
+# name -> factory(params, dim); resolved INSIDE run() where the engine dim
+# is known, so CLIs pass names and never duplicate the dimension
+ENCODERS: dict[str, Callable[..., QueryEncoder]] = {
+    "mean-pool": mean_pool_encoder,
+    "logit-slice": lambda params, dim: logit_slice_encoder(dim),
+}
+
+
 def run(arch: str, requests: int, prompt_len: int, gen: int,
-        rag: bool = False, seed: int = 0, verbose: bool = True):
+        rag: bool = False, seed: int = 0, verbose: bool = True,
+        query_encoder: QueryEncoder | str | None = None):
     cfg = get_smoke(arch)
     model = build_model(cfg)
     key = jax.random.PRNGKey(seed)
@@ -44,6 +103,10 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
         scheduler = StreamingScheduler(
             eng, buckets=bucket_ladder(max(requests, 1)),
             fill_threshold=max(requests // 2, 1), wait_limit_s=5e-3)
+        if query_encoder is None:
+            query_encoder = "mean-pool"
+        if isinstance(query_encoder, str):
+            query_encoder = ENCODERS[query_encoder](params, icfg.dim)
 
     B = requests
     tokens = jax.random.randint(key, (B, prompt_len), 0, cfg.vocab_size)
@@ -65,8 +128,8 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
         logits, cache = decode(params, out[-1], cache)
         out.append(jnp.argmax(logits[:, -1:], -1).astype(jnp.int32))
         if eng is not None and i == 0:
-            # retrieval hook: embed the batch (stub: logits top-k pooled)
-            q = np.asarray(logits[:, 0, :32], np.float32)
+            # retrieval hook: the query encoder embeds the decode state
+            q = query_encoder(logits)
             rag_report = scheduler.run(q)
             retrieved = rag_report.ids
     toks = jnp.concatenate(out, axis=1)
@@ -92,8 +155,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--rag", action="store_true")
+    ap.add_argument("--encoder", default="mean-pool", choices=list(ENCODERS),
+                    help="query encoder for --rag (default: probability-"
+                         "weighted mean token embedding)")
     args = ap.parse_args()
-    run(args.arch, args.requests, args.prompt_len, args.gen, args.rag)
+    run(args.arch, args.requests, args.prompt_len, args.gen, args.rag,
+        query_encoder=args.encoder)
 
 
 if __name__ == "__main__":

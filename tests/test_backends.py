@@ -1,0 +1,198 @@
+"""RankingBackend architecture: golden bit-parity, registry, extensibility.
+
+The golden file tests/golden/backend_parity.npz was captured from the
+PRE-refactor positional-splat query path (scripts/capture_golden_parity.py,
+run on the PR 1 tree). The pluggable-backend path must reproduce it
+bit-for-bit: same ids, same exact rerank distances, same per-lane hop
+counts, for every (mode, scan) cell and under bucketed padding.
+"""
+
+import pathlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import backends, compact_index, engine, placement
+from repro.core.beam_search import beam_search_lane
+from repro.data.synthetic import clustered_vectors, ground_truth, query_set
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "backend_parity.npz"
+CORPUS_SEED, BUILD_KEY = 7, 3          # must match capture_golden_parity.py
+N, DIM, NC, NQ, PAD_TO = 1500, 32, 8, 16, 24
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    x, _ = clustered_vectors(CORPUS_SEED, N, DIM, NC)
+    q = query_set(CORPUS_SEED, x, NQ)
+    return x, q
+
+
+@pytest.fixture(scope="module")
+def built(corpus):
+    """Index built ONCE (construction is mode-independent); engines per
+    (mode, scan) wrap it without re-running kmeans/graph build."""
+    x, _ = corpus
+    icfg = compact_index.IndexConfig(dim=DIM, n_clusters=NC, degree=12,
+                                     knn_k=24)
+    idx, host = compact_index.build_compact_index(
+        jax.random.PRNGKey(BUILD_KEY), x, icfg)
+    sizes = np.asarray(idx.n_valid)
+    bpc = sizes * compact_index.compact_bytes_per_node(icfg.dim, icfg.degree)
+    pl = placement.greedy_place(sizes.astype(np.float64), bpc, 2)
+    return idx, host, pl, icfg
+
+
+def _engine(built, mode, scan, **kw):
+    idx, host, pl, icfg = built
+    scfg = engine.SearchConfig(nprobe=3, ef=24, k=8, mode=mode, scan=scan)
+    return engine.PIMCQGEngine(idx, host, pl, icfg, scfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Golden bit-parity with the pre-refactor query path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,scan", [
+    ("mulfree", "beam"), ("mulfree", "gemv"),
+    ("exact", "beam"), ("exact", "gemv")])
+def test_golden_parity(built, corpus, mode, scan):
+    g = np.load(GOLDEN)
+    _, q = corpus
+    np.testing.assert_array_equal(np.asarray(q, np.float32), g["queries"])
+    eng = _engine(built, mode, scan)
+    res, stats = eng.search(q)
+    np.testing.assert_array_equal(np.asarray(res.ids),
+                                  g[f"{mode}_{scan}_ids"])
+    np.testing.assert_array_equal(np.asarray(res.dists),
+                                  g[f"{mode}_{scan}_dists"])
+    np.testing.assert_array_equal(np.asarray(stats.hops),
+                                  g[f"{mode}_{scan}_hops"])
+
+
+@pytest.mark.parametrize("mode", ["mulfree", "exact"])
+def test_golden_parity_padded(built, corpus, mode):
+    """search(pad_to=B) (the bucketed/padded serving path) is also
+    bit-identical to the pre-refactor executable."""
+    g = np.load(GOLDEN)
+    _, q = corpus
+    eng = _engine(built, mode, "beam")
+    res, _ = eng.search(q, pad_to=PAD_TO)
+    np.testing.assert_array_equal(np.asarray(res.ids),
+                                  g[f"{mode}_pad{PAD_TO}_ids"])
+    np.testing.assert_array_equal(np.asarray(res.dists),
+                                  g[f"{mode}_pad{PAD_TO}_dists"])
+
+
+# ---------------------------------------------------------------------------
+# Backends own their array slices — no dummy-mode arrays anywhere
+# ---------------------------------------------------------------------------
+
+def test_placed_index_carries_only_backend_slice(built):
+    mf = _engine(built, "mulfree", "beam")
+    ex = _engine(built, "exact", "beam")
+    hm = _engine(built, "hamming", "beam")
+    assert isinstance(mf.placed.arrays, backends.MulFreeArrays)
+    assert isinstance(ex.placed.arrays, backends.ExactArrays)
+    # hamming needs NOTHING beyond the shared codes: zero array leaves
+    assert jax.tree_util.tree_leaves(hm.placed.arrays) == []
+    # and no backend slice smuggles the other mode's tables along
+    assert len(jax.tree_util.tree_leaves(mf.placed.arrays)) == 4
+    assert len(jax.tree_util.tree_leaves(ex.placed.arrays)) == 2
+
+
+def test_beam_search_lane_signature_is_small():
+    import inspect
+    sig = inspect.signature(beam_search_lane)
+    assert len(sig.parameters) <= 6, list(sig.parameters)
+
+
+# ---------------------------------------------------------------------------
+# Third backend composes with every layer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scan", ["beam", "gemv"])
+def test_hamming_backend_end_to_end(built, corpus, scan):
+    x, q = corpus
+    gt = ground_truth(x, q, 8)
+    eng = _engine(built, "hamming", scan)
+    res, stats = eng.search(q)
+    ids = np.asarray(res.ids)
+    assert ids.shape == (NQ, 8) and (ids >= 0).all()
+    assert int(stats.dropped_lanes) == 0
+    # host rerank distances are exact regardless of the pre-rank backend
+    d0 = float(res.dists[0, 0])
+    true0 = float(((x[ids[0, 0]] - q[0]) ** 2).sum())
+    assert abs(d0 - true0) < 1e-2 * max(true0, 1.0)
+    # sign-only pre-rank + exact rerank still finds most true neighbors
+    rec = np.mean([len(set(ids[i]) & set(gt[i])) / 8 for i in range(NQ)])
+    assert rec > 0.5, rec
+
+
+def test_hamming_backend_bucketed_padded(built, corpus):
+    """A backend never mentions padding/bucketing, yet composes with it:
+    padded results equal unpadded results for the real queries."""
+    _, q = corpus
+    idx, host, pl, icfg = built
+    scfg = engine.SearchConfig(nprobe=3, ef=24, k=8, mode="hamming")
+    eng = engine.PIMCQGEngine(idx, host, pl, icfg, scfg, buckets=(8, PAD_TO))
+    base, _ = eng.search(q)
+    padded, _ = eng.search(q, pad_to=PAD_TO)
+    np.testing.assert_array_equal(np.asarray(base.ids),
+                                  np.asarray(padded.ids))
+    bucketed, _ = eng.search_bucketed(q[:5])     # routes to bucket 8
+    ref, _ = eng.search(q[:5])
+    np.testing.assert_array_equal(np.asarray(bucketed.ids)[:5],
+                                  np.asarray(ref.ids))
+
+
+def test_hamming_lowers_under_mesh():
+    """The third backend runs through the production-mesh lowering with its
+    own (empty) index slice — no dummy arrays in the lowered signature."""
+    from repro.launch.anns_step import AnnsScale, index_specs, lower_anns
+    s = AnnsScale(n=4096, dim=16, n_clusters=8, budget=512, degree=8,
+                  nprobe=2, ef=8, k=4, queries=8, max_iters=8)
+    placed, _ = index_specs(s, 1, "hamming")
+    assert jax.tree_util.tree_leaves(placed.arrays) == []
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    lowered, _ = lower_anns(mesh, s, scan="beam", mode="hamming")
+    assert "while" in lowered.as_text()          # the beam loop survived
+    lowered.compile()                            # and it compiles
+
+
+# ---------------------------------------------------------------------------
+# Registry mechanics
+# ---------------------------------------------------------------------------
+
+def test_registry_lookup_and_errors():
+    assert set(backends.available_backends()) >= {"mulfree", "exact",
+                                                  "hamming"}
+    assert backends.get_backend("mulfree") is backends.get_backend("mulfree")
+    with pytest.raises(ValueError, match="unknown ranking backend"):
+        backends.get_backend("nope")
+
+
+def test_user_registered_backend_runs(built, corpus):
+    """A backend registered from OUTSIDE the module composes with the
+    engine with zero engine changes — the extensibility contract."""
+    _, q = corpus
+
+    class ScaledHamming(backends.HammingBackend):
+        """Hamming with a rank offset — distinct name, same machinery."""
+        name = "hamming-x2"
+
+        def _hamming(self, codes, qcode, dim):
+            return 2 * super()._hamming(codes, qcode, dim)
+
+    backends.register_backend(ScaledHamming())
+    try:
+        eng = _engine(built, "hamming-x2", "beam")
+        res, _ = eng.search(q)
+        ref, _ = _engine(built, "hamming", "beam").search(q)
+        # doubling every rank preserves the ordering -> identical results
+        np.testing.assert_array_equal(np.asarray(res.ids),
+                                      np.asarray(ref.ids))
+    finally:
+        backends._REGISTRY.pop("hamming-x2", None)
