@@ -10,6 +10,7 @@ headers). Modules:
     overfetch       Fig 15     EF sweep vs SymphonyQG-mode baseline
     scheduling      Fig 16     policy comparison (calibrated simulator)
     streaming       §IV-B      bucketed streaming scheduler vs per-shape
+    overload        ISSUE 3    fleet tier under 0.5x..8x offered load
     breakdown       Fig 14     five-stage pipeline breakdown
     mulfree_bench   Fig 17/9   shift-add kernel time + recall delta
     pim_baselines   Fig 13     IVF-PQ recall ceiling vs PIMCQG
@@ -30,6 +31,7 @@ MODULES = [
     ("fig15", "overfetch"),
     ("fig16", "scheduling"),
     ("stream", "streaming"),
+    ("overload", "overload"),
     ("fig14", "breakdown"),
     ("fig17", "mulfree_bench"),
     ("fig13", "pim_baselines"),

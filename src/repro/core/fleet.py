@@ -1,0 +1,270 @@
+"""Multi-engine fleet serving tier (paper §IV-B scaled out, ROADMAP's
+"multi-host scheduler + admission control / load shedding" step).
+
+``FleetScheduler`` shards one query stream across N engine replicas, each
+driven by its own ``EngineWorker`` (core/pipeline.py — the per-engine
+flush/harvest loop StreamingScheduler runs exactly one of). The fleet adds
+the three overload mechanisms UpANNS/DRIM-ANN-style multi-node serving
+needs on the host tier:
+
+  * **routing** — arrivals are dealt to workers in flush-sized chunks,
+    either ``round-robin`` (deterministic dealing) or ``least-in-flight``
+    (join-the-shortest-queue over device FIFO depth, the DRIM-ANN-style
+    load balance across unevenly-loaded compute units).
+
+  * **admission control / backpressure** — a bounded global admission
+    queue in front of the workers; a worker only accepts queries while it
+    has credits (free in-flight FIFO slots x max bucket). At zero credits
+    everywhere, queries wait in the admission queue instead of stalling
+    the host thread on one engine; a full admission queue sheds new
+    arrivals immediately.
+
+  * **deadline load shedding** — a query still undispatched
+    ``shed_deadline_s`` after arrival is dropped (ids -1, latency NaN,
+    counted in ``shed_fraction``). Every query that IS dispatched started
+    within its deadline, so overload degrades to a goodput plateau with
+    bounded p99 instead of unbounded queueing latency collapse.
+    ``EventSimulator.dynamic(..., shed_deadline_s=...)`` models the same
+    policy offline; benchmarks/overload.py overlays the two.
+
+Admitted queries flow through the exact same padded/bucketed
+``engine.search(pad_to=...)`` path as a single engine, into one shared
+``StreamSink`` — their results are bit-identical to an unpadded
+single-engine search of the same stream.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import math
+import time
+from collections import deque
+
+import numpy as np
+
+from .pipeline import (EngineWorker, StageCosts, StreamSink, percentile_ms,
+                       resolve_stream_params)
+
+__all__ = ["FleetScheduler", "FleetReport", "replicate_engine"]
+
+ROUTE_POLICIES = ("round-robin", "least-in-flight")
+
+
+def replicate_engine(eng, n: int, *, share_executables: bool = True) -> list:
+    """N logical replicas of one built PIMCQGEngine for a single-host fleet.
+
+    Replicas share the placed index arrays (one device copy — they model N
+    schedulable engines, not N copies of the corpus). With
+    ``share_executables`` (default) they also share the compiled-search
+    cache, so the fleet warms ``len(buckets)`` executables total instead of
+    per replica; pass False to give each replica its own cache (what
+    distinct hosts would have)."""
+    if n < 1:
+        raise ValueError(f"need at least one replica, got {n}")
+    out = [eng]
+    for _ in range(n - 1):
+        rep = copy.copy(eng)
+        if not share_executables:
+            rep._search_cache = {}
+        out.append(rep)
+    return out
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """Per-stream output of FleetScheduler.run. Shed queries keep the sink
+    defaults (ids -1, dists inf, latency NaN) and are flagged in ``shed``;
+    percentiles/qps cover admitted queries only (goodput, honestly NaN when
+    nothing completed)."""
+    ids: np.ndarray          # (N, k) int32, submission order; -1 rows = shed
+    dists: np.ndarray        # (N, k) f32 exact squared distances
+    latency_s: np.ndarray    # (N,) completion - arrival; NaN = shed
+    shed: np.ndarray         # (N,) bool
+    shed_wait_s: np.ndarray  # (N,) queue wait at shed time; NaN = admitted
+    shed_fraction: float
+    qps: float               # admitted queries / makespan (goodput)
+    p50_ms: float
+    p99_ms: float
+    n_queries: int
+    n_admitted: int
+    n_shed: int
+    n_flushes: int
+    flush_sizes: list
+    per_engine: list         # per-worker dicts: flushes/queries/max_in_flight
+    makespan_s: float
+    route: str
+    backend: str = ""
+
+
+class FleetScheduler:
+    """Shard one query stream across N engine replicas with admission
+    control. Single-engine semantics (bucket ladder, fill/deadline flush,
+    bounded in-flight FIFO) are per-worker and identical to
+    StreamingScheduler; the fleet owns routing, the bounded admission
+    queue, and the shed policy."""
+
+    def __init__(self, engines, *, route: str = "least-in-flight",
+                 buckets=None, costs: StageCosts | None = None,
+                 fill_threshold: int | None = None, wait_limit_s: float = 2e-3,
+                 fifo_depth: int = 4, max_batch: int = 64,
+                 admission_depth: int | None = None,
+                 shed_deadline_s: float | None = None):
+        if not engines:
+            raise ValueError("FleetScheduler needs at least one engine")
+        if route not in ROUTE_POLICIES:
+            raise ValueError(f"route must be one of {ROUTE_POLICIES}, "
+                             f"got {route!r}")
+        ks = {e.scfg.k for e in engines}
+        if len(ks) != 1:
+            raise ValueError(f"engines disagree on k: {sorted(ks)}")
+        self.engines = list(engines)
+        self.route = route
+        (self.buckets, self.fill_threshold, self.wait_limit_s,
+         self.fifo_depth) = resolve_stream_params(
+            engines[0], buckets, costs, fill_threshold, wait_limit_s,
+            fifo_depth, max_batch)
+        if shed_deadline_s is not None and not shed_deadline_s > 0:
+            raise ValueError(
+                f"shed_deadline_s must be > 0 or None, got {shed_deadline_s}")
+        self.shed_deadline_s = shed_deadline_s
+        if admission_depth is None:
+            # default: room for every FIFO to refill once while a full
+            # complement is buffered — deep enough to ride a burst, bounded
+            # so overload surfaces as shedding, not unbounded queue growth
+            admission_depth = 2 * len(engines) * self.fifo_depth \
+                * self.buckets[-1]
+        self.admission_depth = int(admission_depth)
+        if self.admission_depth < 1:
+            raise ValueError(
+                f"admission_depth must be >= 1, got {admission_depth}")
+
+    # -- routing --------------------------------------------------------------
+    def _pick_worker(self, workers):
+        """Next worker to feed, honoring credits; None = all backpressured."""
+        if self.route == "round-robin":
+            for off in range(len(workers)):
+                w = workers[(self._rr + off) % len(workers)]
+                if w.room() > 0:
+                    self._rr = (self._rr + off + 1) % len(workers)
+                    return w
+            return None
+        live = [w for w in workers if w.room() > 0]
+        if not live:
+            return None
+        return min(live, key=lambda w: (w.in_flight, len(w.buf)))
+
+    def _route_admitted(self, admission: deque, workers):
+        """Deal queries from the admission queue to workers in flush-sized
+        chunks (one chunk = at most one flush quantum, so round-robin
+        genuinely interleaves engines instead of filling the first)."""
+        quantum = max(1, min(self.fill_threshold, self.buckets[-1]))
+        while admission:
+            w = self._pick_worker(workers)
+            if w is None:
+                return                      # credit-based backpressure
+            for _ in range(min(w.room(), quantum, len(admission))):
+                w.submit(admission.popleft())
+
+    # -- the run loop ---------------------------------------------------------
+    def run(self, queries, arrival_times=None) -> FleetReport:
+        """Replay a (possibly timed) stream through the fleet; see
+        StreamingScheduler.run for the arrival-replay semantics."""
+        q = np.asarray(queries, np.float32)
+        n = len(q)
+        arr = np.zeros(n) if arrival_times is None \
+            else np.asarray(arrival_times, np.float64)
+        order = np.argsort(arr, kind="stable")
+        sink = StreamSink(q, arr, self.engines[0].scfg.k)
+        workers = [EngineWorker(e, sink, buckets=self.buckets,
+                                fill_threshold=self.fill_threshold,
+                                wait_limit_s=self.wait_limit_s,
+                                fifo_depth=self.fifo_depth)
+                   for e in self.engines]
+        admission: deque = deque()          # indices, arrival order
+        shed = np.zeros(n, bool)
+        shed_wait = np.full(n, np.nan)
+        self._rr = 0
+        i = 0
+
+        def shed_one(idx: int, wait: float):
+            shed[idx] = True
+            shed_wait[idx] = wait
+
+        while i < n or admission or not all(w.idle() for w in workers):
+            t = sink.now()
+            # 1. arrivals -> bounded admission queue (overflow sheds now)
+            while i < n and arr[order[i]] <= t:
+                idx = int(order[i])
+                i += 1
+                if len(admission) >= self.admission_depth:
+                    shed_one(idx, t - arr[idx])
+                else:
+                    admission.append(idx)
+            # 2. deadline shedding at the head of the queue — checked before
+            # routing so every dispatched query started within its deadline
+            if self.shed_deadline_s is not None:
+                while admission \
+                        and t - arr[admission[0]] >= self.shed_deadline_s:
+                    idx = admission.popleft()
+                    shed_one(idx, t - arr[idx])
+            # 3. deal admitted queries to workers with credits
+            self._route_admitted(admission, workers)
+            # 4. pump + harvest every worker, non-blocking: one slow engine
+            # must not stall its siblings (that is the fleet's whole point)
+            drain = i >= n and not admission
+            progress = False
+            for w in workers:
+                progress |= w.pump(t, drain=drain, block_when_full=False)
+            for w in workers:
+                progress |= w.harvest(block=False)
+            if progress:
+                continue
+            # 5. idle: nap until the next arrival / flush deadline / shed
+            # deadline, or block on a device if that is all that's left
+            nxt = arr[order[i]] if i < n else math.inf
+            for w in workers:
+                nxt = min(nxt, w.next_deadline())
+            if admission and self.shed_deadline_s is not None:
+                nxt = min(nxt, arr[admission[0]] + self.shed_deadline_s)
+            if not math.isfinite(nxt):
+                for w in workers:
+                    if w.inflight:
+                        w.harvest(block=True)
+                        break
+                continue
+            # dt <= 0 means a flush deadline already passed but every worker
+            # is out of credits — nap briefly instead of spinning until a
+            # device frees a slot
+            dt = nxt - sink.now()
+            time.sleep(min(max(dt, 5e-5), 5e-4))
+        makespan = sink.now()
+
+        n_shed = int(shed.sum())
+        n_admitted = n - n_shed
+        flush_sizes = [s for w in workers for s in w.flush_sizes]
+        per_engine = []
+        seen_caches: set[int] = set()
+        for j, w in enumerate(workers):
+            # replicas built with share_executables share one compile cache;
+            # attribute its compiles to the first worker on that cache so
+            # summing per-engine compiles counts each executable once
+            cache = id(getattr(w.engine, "_search_cache", w.engine))
+            per_engine.append({"engine": j, "flushes": len(w.flush_sizes),
+                               "queries": int(sum(w.flush_sizes)),
+                               "max_in_flight": w.max_in_flight,
+                               "compiles": w.compiles
+                               if cache not in seen_caches else 0})
+            seen_caches.add(cache)
+        return FleetReport(
+            ids=sink.out_ids, dists=sink.out_d, latency_s=sink.lat,
+            shed=shed, shed_wait_s=shed_wait,
+            shed_fraction=n_shed / n if n else 0.0,
+            qps=n_admitted / makespan if makespan > 0 else 0.0,
+            p50_ms=percentile_ms(sink.lat, 50),
+            p99_ms=percentile_ms(sink.lat, 99),
+            n_queries=n, n_admitted=n_admitted, n_shed=n_shed,
+            n_flushes=len(flush_sizes), flush_sizes=flush_sizes,
+            per_engine=per_engine, makespan_s=makespan, route=self.route,
+            backend=getattr(getattr(self.engines[0], "scfg", None),
+                            "mode", ""))

@@ -26,6 +26,11 @@ Three artifacts:
     stage ③ (device) of batch i runs while the host reranks batch i-1 and
     preps batch i+1; a bounded FIFO implements the paper's flow control,
     and completed batches are reassembled per query (out-of-order).
+
+  * ``EngineWorker`` — the per-engine flush/harvest loop underneath
+    StreamingScheduler, exposed so ``core.fleet.FleetScheduler`` can
+    compose N of them (one per engine replica) behind a bounded admission
+    queue with credit-based backpressure and deadline load shedding.
 """
 
 from __future__ import annotations
@@ -43,7 +48,8 @@ __all__ = [
     "LinkModel", "UPMEM_LINK", "TPU_ICI_LINK", "PCIE_LINK",
     "StageCosts", "tune_minibatch", "bucket_ladder",
     "EventSimulator", "SimReport", "round_robin_batches",
-    "StreamingScheduler", "StreamReport",
+    "EngineWorker", "StreamSink", "StreamingScheduler", "StreamReport",
+    "percentile_ms", "resolve_stream_params",
 ]
 
 
@@ -152,12 +158,14 @@ def round_robin_batches(pus, minibatch: int) -> list[tuple[int, int, float]]:
 
 @dataclasses.dataclass
 class SimReport:
-    qps: float
-    mean_latency_s: float
+    qps: float                # completed queries / makespan (goodput)
+    mean_latency_s: float     # over completed queries only
     stage_busy: dict          # stage -> busy fraction of makespan
     stage_time: dict          # stage -> total seconds
     makespan_s: float
-    n_queries: int
+    n_queries: int            # completed (admitted) queries
+    n_shed: int = 0           # queries dropped by the shedding policy
+    shed_fraction: float = 0.0  # n_shed / offered
 
 
 class EventSimulator:
@@ -189,8 +197,14 @@ class EventSimulator:
     # links), one server per PU, rerank pool (W servers). Each stage has its
     # own FIFO; stages of different batches overlap freely — this is exactly
     # the concurrency structure of Fig 8 (async pipeline).
-    def _run_batches(self, batches, warm_arrival=None):
-        """batches: list of (pu, n_queries, ready_time); returns SimReport."""
+    def _run_batches(self, batches, shed_deadline_s: float | None = None):
+        """batches: list of (pu, n_queries, ready_time); returns SimReport.
+
+        With ``shed_deadline_s`` set, a batch whose host prep could not
+        start within the deadline of its ready time is shed (admission-time
+        load shedding): its queries count toward ``shed_fraction`` instead
+        of completing, so overload saturates goodput instead of growing
+        latency without bound."""
         c = self.costs
         nres_in = "link"
         nres_out = "link_out" if self.full_duplex else "link"
@@ -201,13 +215,14 @@ class EventSimulator:
                 "xfer_out": 0.0, "rerank": 0.0}
         STAGES = ("prep", "xfer_in", "search", "xfer_out", "rerank")
 
-        # event heap: (ready_time, seq, batch_idx, stage_idx)
+        # event heap: (ready_time, batch_idx, stage_idx)
         ev: list = []
         for i, (pu, n, ready) in enumerate(batches):
             heapq.heappush(ev, (ready, i, 0))
         inflight = 0
         gate_wait: deque = deque()          # batches held back by flow control
         done_t = {}
+        n_shed = 0
         end = 0.0
         limit = self.fifo_depth * self.n_pus
 
@@ -224,8 +239,18 @@ class EventSimulator:
 
         while ev:
             ready, i, stage = heapq.heappop(ev)
-            pu, n, _ = batches[i]
+            pu, n, arrival = batches[i]
             if stage == 0:
+                if shed_deadline_s is not None \
+                        and max(ready, free["prep"]) - arrival > shed_deadline_s:
+                    n_shed += n        # shed at admission: prep never starts
+                    if gate_wait:      # forward the flow-control release
+                        j, jready = gate_wait.popleft()   # token a completed
+                        heapq.heappush(ev, (max(jready, ready), j, 0))
+                        # batch would have handed this one — a shed batch
+                        # never completes, so without this the gate chain
+                        # breaks and held batches are silently lost
+                    continue
                 if inflight >= limit:
                     gate_wait.append((i, ready))
                     continue
@@ -258,19 +283,25 @@ class EventSimulator:
                     j, jready = gate_wait.popleft()
                     heapq.heappush(ev, (max(jready, tdone), j, 0))
 
-        nq = sum(n for _, n, _ in batches)
-        lat = float(np.mean([done_t[i] - batches[i][2] for i in done_t]))
+        offered = sum(n for _, n, _ in batches)
+        nq = sum(batches[i][1] for i in done_t)   # measured, not offered-shed
+        assert nq + n_shed == offered, "simulator lost batches in flight"
+        lat = float(np.mean([done_t[i] - batches[i][2] for i in done_t])) \
+            if done_t else float("nan")     # nothing completed: NaN, not 0
         return SimReport(qps=nq / end if end > 0 else 0.0,
                          mean_latency_s=lat,
-                         stage_busy={k: v / end for k, v in busy.items()},
-                         stage_time=dict(busy), makespan_s=end, n_queries=nq)
+                         stage_busy={k: v / end for k, v in busy.items()}
+                         if end > 0 else {k: 0.0 for k in busy},
+                         stage_time=dict(busy), makespan_s=end, n_queries=nq,
+                         n_shed=n_shed,
+                         shed_fraction=n_shed / offered if offered else 0.0)
 
     # -- policies -------------------------------------------------------------
     def per_query(self, n_queries: int, pu_of_query=None) -> SimReport:
         pus = pu_of_query if pu_of_query is not None \
             else np.arange(n_queries) % self.n_pus
         batches = [(int(pus[i]), 1, 0.0) for i in range(n_queries)]
-        return self._run_batches(batches, [0.0] * n_queries)
+        return self._run_batches(batches)
 
     def batch_sync(self, n_queries: int, global_batch: int, pu_of_query=None
                    ) -> SimReport:
@@ -307,11 +338,16 @@ class EventSimulator:
         pus = pu_of_query if pu_of_query is not None \
             else np.arange(n_queries) % self.n_pus
         # round-robin interleave across PUs to mimic arrival order
-        return self._run_batches(round_robin_batches(pus, minibatch), None)
+        return self._run_batches(round_robin_batches(pus, minibatch))
 
     def dynamic(self, arrival_times: np.ndarray, pu_of_query: np.ndarray,
-                threshold: int, wait_limit_s: float) -> SimReport:
-        """Fig 7(c): per-PU buffers; flush on fill OR oldest-query timeout."""
+                threshold: int, wait_limit_s: float,
+                shed_deadline_s: float | None = None) -> SimReport:
+        """Fig 7(c): per-PU buffers; flush on fill OR oldest-query timeout.
+
+        ``shed_deadline_s`` enables the fleet tier's admission-deadline
+        shedding (see ``_run_batches``) so the simulator predicts the
+        goodput plateau the real FleetScheduler measures under overload."""
         order = np.argsort(arrival_times)
         buf: dict[int, list] = {p: [] for p in range(self.n_pus)}
         oldest: dict[int, float] = {}
@@ -325,7 +361,7 @@ class EventSimulator:
 
         for i in order:
             now = float(arrival_times[i])
-            # timeout flushes due before this arrival
+            # timeout flushes due before this arrival, at their fire times
             for pu in list(oldest):
                 if now - oldest[pu] >= wait_limit_s:
                     flush(pu, oldest[pu] + wait_limit_s)
@@ -334,16 +370,207 @@ class EventSimulator:
             oldest.setdefault(pu, now)
             if len(buf[pu]) >= threshold:
                 flush(pu, now)
-        tend = float(arrival_times.max()) if len(arrival_times) else 0.0
-        for pu in range(self.n_pus):
-            flush(pu, tend)
+        # end of stream: residual buffers still fire at their true deadline
+        # (oldest arrival + wait limit), which may be after the last arrival
+        # — nothing flushes "at tend" just because the trace ran out
+        for pu in sorted(oldest):
+            flush(pu, oldest[pu] + wait_limit_s)
         batches.sort(key=lambda b: b[2])
-        return self._run_batches(batches, None)
+        return self._run_batches(batches, shed_deadline_s)
 
 
 # ---------------------------------------------------------------------------
 # Real streaming scheduler over a PIMCQGEngine
 # ---------------------------------------------------------------------------
+
+def percentile_ms(latency_s: np.ndarray, p: float) -> float:
+    """NaN-safe latency percentile in ms. NaN entries are queries that never
+    completed (shed, or a partially-failed run) — they are excluded rather
+    than poisoning the statistic; with no finite samples the answer is
+    honestly NaN, not 0."""
+    lat = np.asarray(latency_s, np.float64)
+    if lat.size == 0 or not np.isfinite(lat).any():
+        return float("nan")
+    return float(np.nanpercentile(np.where(np.isfinite(lat), lat, np.nan),
+                                  p)) * 1e3
+
+
+def resolve_stream_params(engine, buckets, costs: StageCosts | None,
+                          fill_threshold, wait_limit_s, fifo_depth,
+                          max_batch) -> tuple[tuple[int, ...], int, float, int]:
+    """Shared ladder resolution + argument validation for the streaming
+    tier (StreamingScheduler and FleetScheduler workers). An explicit
+    fill_threshold=0 is an error, not "unset" — only None means default."""
+    if buckets is None:
+        if engine.buckets:
+            buckets = engine.buckets        # adopt (never mutate) the ladder
+        else:
+            nstar = tune_minibatch(costs)[0] if costs is not None else None
+            buckets = bucket_ladder(max_batch, nstar)
+    buckets = tuple(sorted({int(b) for b in buckets}))
+    if not buckets or buckets[0] < 1:
+        raise ValueError(f"buckets must be positive ints, got {buckets}")
+    fill = buckets[-1] if fill_threshold is None else int(fill_threshold)
+    if fill < 1:
+        raise ValueError(f"fill_threshold must be >= 1, got {fill}")
+    wait = float(wait_limit_s)
+    if not wait > 0:
+        raise ValueError(f"wait_limit_s must be > 0, got {wait_limit_s}")
+    depth = int(fifo_depth)
+    if depth < 1:
+        raise ValueError(f"fifo_depth must be >= 1, got {fifo_depth}")
+    return buckets, fill, wait, depth
+
+
+class StreamSink:
+    """Per-run shared state of one query stream: the query matrix, arrival
+    times, output arrays, and the run clock. Workers write completed
+    batches here; a fleet shares ONE sink across all its workers so the
+    reassembled output is indistinguishable from a single engine's."""
+
+    def __init__(self, queries: np.ndarray, arrivals: np.ndarray, k: int):
+        self.q = queries
+        self.arr = arrivals
+        n = len(queries)
+        self.out_ids = np.full((n, k), -1, np.int32)
+        self.out_d = np.full((n, k), np.inf, np.float32)
+        self.lat = np.full(n, np.nan)
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def finish(self, idxs: np.ndarray, ids: np.ndarray, dists: np.ndarray):
+        tc = self.now()
+        self.out_ids[idxs] = ids
+        self.out_d[idxs] = dists
+        self.lat[idxs] = tc - self.arr[idxs]
+
+
+class EngineWorker:
+    """One engine's flush/harvest loop, factored out of StreamingScheduler
+    so the fleet tier can compose N of them over one stream.
+
+    Owns the per-engine arrival buffer, the bucket-ladder dispatch, the
+    bounded in-flight FIFO (the paper's flow control), and out-of-order
+    harvest. Two backpressure styles via ``pump``:
+
+      * block_when_full=True  — single-engine mode: a full FIFO is relieved
+        by a blocking harvest (the host thread has nothing better to do).
+      * block_when_full=False — fleet mode: at zero credits the flush is
+        refused and queries stay upstream in the fleet's admission queue,
+        so one slow engine never stalls its siblings.
+    """
+
+    def __init__(self, engine, sink: StreamSink, *, buckets: tuple[int, ...],
+                 fill_threshold: int, wait_limit_s: float, fifo_depth: int):
+        self.engine = engine
+        self.sink = sink
+        self.buckets = buckets
+        self.max_bucket = buckets[-1]
+        self.fill_threshold = fill_threshold
+        self.wait_limit_s = wait_limit_s
+        self.fifo_depth = fifo_depth
+        self.buf: list[int] = []            # admitted, not yet dispatched
+        self.inflight: deque = deque()      # (query_indices, lazy result, t)
+        self.flush_sizes: list[int] = []
+        self.max_in_flight = 0
+        self._compiles0 = engine.compile_count
+
+    # -- credit-based backpressure accounting --------------------------------
+    @property
+    def in_flight(self) -> int:
+        return len(self.inflight)
+
+    @property
+    def credits(self) -> int:
+        """Free in-flight FIFO slots — the fleet's backpressure currency."""
+        return self.fifo_depth - len(self.inflight)
+
+    def room(self) -> int:
+        """Queries this worker can accept without overrunning its FIFO:
+        each free slot is worth one max-bucket flush."""
+        return max(0, self.credits * self.max_bucket - len(self.buf))
+
+    @property
+    def compiles(self) -> int:
+        return self.engine.compile_count - self._compiles0
+
+    def submit(self, idx: int):
+        self.buf.append(idx)
+
+    # -- dispatch / harvest ---------------------------------------------------
+    def _dispatch(self, q):
+        """Pad a flush up to the worker's own ladder — the engine is shared
+        state and is never reconfigured from here."""
+        nq = len(q)
+        for b in self.buckets:
+            if b >= nq:
+                return self.engine.search(q, pad_to=b)
+        raise AssertionError(
+            f"flush of {nq} exceeds max bucket {self.buckets[-1]}")
+
+    @staticmethod
+    def _ready(res) -> bool:
+        try:
+            return bool(res.ids.is_ready())
+        except AttributeError:      # non-jax result (e.g. test doubles)
+            return True
+
+    def _finish(self, idxs, res, _t_dispatch):
+        ids = np.asarray(res.ids)           # blocks until device done
+        ds = np.asarray(res.dists)
+        self.sink.finish(idxs, ids, ds)
+
+    def harvest(self, block: bool = False) -> bool:
+        got = False
+        if block and self.inflight:
+            self._finish(*self.inflight.popleft())
+            got = True
+        pending = list(self.inflight)
+        self.inflight.clear()
+        for rec in pending:                 # out-of-order completion
+            if self._ready(rec[1]):
+                self._finish(*rec)
+                got = True
+            else:
+                self.inflight.append(rec)
+        return got
+
+    def flush_due(self, t: float, drain: bool) -> bool:
+        buf = self.buf
+        return bool(buf) and (
+            len(buf) >= self.fill_threshold
+            or t - self.sink.arr[buf[0]] >= self.wait_limit_s
+            or drain)                       # stream ended: drain
+
+    def pump(self, t: float, *, drain: bool = False,
+             block_when_full: bool = True) -> bool:
+        """Dispatch one flush if a trigger (fill / deadline / drain) fired;
+        returns True iff a flush happened."""
+        if not self.flush_due(t, drain):
+            return False
+        if not block_when_full and self.credits <= 0:
+            return False                    # backpressure: refuse, don't stall
+        take = self.buf[:self.max_bucket]
+        del self.buf[:len(take)]
+        res, _ = self._dispatch(self.sink.q[take])   # async device dispatch
+        self.inflight.append((np.asarray(take), res, t))
+        self.max_in_flight = max(self.max_in_flight, len(self.inflight))
+        self.flush_sizes.append(len(take))
+        if block_when_full and len(self.inflight) >= self.fifo_depth:
+            self.harvest(block=True)        # FIFO flow control
+        return True
+
+    def next_deadline(self) -> float:
+        """Earliest future time this worker's wait-limit trigger fires."""
+        if not self.buf:
+            return math.inf
+        return float(self.sink.arr[self.buf[0]]) + self.wait_limit_s
+
+    def idle(self) -> bool:
+        return not self.buf and not self.inflight
+
 
 @dataclasses.dataclass
 class StreamReport:
@@ -374,39 +601,20 @@ class StreamingScheduler:
     ``len(buckets)`` jitted executables instead of one per distinct batch
     size. JAX's async dispatch overlaps device search with host prep/rerank;
     a bounded in-flight FIFO is the paper's flow control; completed batches
-    are harvested out of order (``is_ready``) and reassembled per query."""
+    are harvested out of order (``is_ready``) and reassembled per query.
+
+    The flush/harvest machinery lives in ``EngineWorker`` (one per engine);
+    this class composes exactly one. ``core.fleet.FleetScheduler`` composes
+    N of them behind an admission queue for the multi-engine tier."""
 
     def __init__(self, engine, *, buckets=None, costs: StageCosts | None = None,
                  fill_threshold: int | None = None, wait_limit_s: float = 2e-3,
                  fifo_depth: int = 4, max_batch: int = 64):
-        if buckets is None:
-            if engine.buckets:
-                buckets = engine.buckets    # adopt (never mutate) the ladder
-            else:
-                nstar = tune_minibatch(costs)[0] if costs is not None else None
-                buckets = bucket_ladder(max_batch, nstar)
-        self.buckets = tuple(sorted({int(b) for b in buckets}))
         self.engine = engine
-        self.fill_threshold = int(fill_threshold or self.buckets[-1])
-        self.wait_limit_s = float(wait_limit_s)
-        self.fifo_depth = int(fifo_depth)
-
-    def _dispatch(self, q):
-        """Pad a flush up to the scheduler's own ladder — the engine is
-        shared state and is never reconfigured from here."""
-        nq = len(q)
-        for b in self.buckets:
-            if b >= nq:
-                return self.engine.search(q, pad_to=b)
-        raise AssertionError(
-            f"flush of {nq} exceeds max bucket {self.buckets[-1]}")
-
-    @staticmethod
-    def _ready(res) -> bool:
-        try:
-            return bool(res.ids.is_ready())
-        except AttributeError:      # non-jax result (e.g. test doubles)
-            return True
+        (self.buckets, self.fill_threshold, self.wait_limit_s,
+         self.fifo_depth) = resolve_stream_params(
+            engine, buckets, costs, fill_threshold, wait_limit_s,
+            fifo_depth, max_batch)
 
     def run(self, queries, arrival_times=None) -> StreamReport:
         """Replay a (possibly timed) query stream through the scheduler.
@@ -415,85 +623,42 @@ class StreamingScheduler:
         the run sleeps to honor future arrivals, so QPS under a Poisson
         trace is sustained-throughput, not batch throughput."""
         q = np.asarray(queries, np.float32)
-        n, k = len(q), self.engine.scfg.k
+        n = len(q)
         arr = np.zeros(n) if arrival_times is None \
             else np.asarray(arrival_times, np.float64)
         order = np.argsort(arr, kind="stable")
-        out_ids = np.full((n, k), -1, np.int32)
-        out_d = np.full((n, k), np.inf, np.float32)
-        lat = np.full(n, np.nan)
-        inflight: deque = deque()    # (query_indices, lazy result, t_dispatch)
-        flush_sizes: list[int] = []
-        compiles0 = self.engine.compile_count
-        max_bucket = self.buckets[-1]
-        buf: list[int] = []
+        sink = StreamSink(q, arr, self.engine.scfg.k)
+        w = EngineWorker(self.engine, sink, buckets=self.buckets,
+                         fill_threshold=self.fill_threshold,
+                         wait_limit_s=self.wait_limit_s,
+                         fifo_depth=self.fifo_depth)
         i = 0
-        t0 = time.perf_counter()
-
-        def now() -> float:
-            return time.perf_counter() - t0
-
-        def finish(idxs, res, _t_dispatch):
-            ids = np.asarray(res.ids)           # blocks until device done
-            ds = np.asarray(res.dists)
-            tc = now()
-            out_ids[idxs] = ids
-            out_d[idxs] = ds
-            lat[idxs] = tc - arr[idxs]
-
-        def harvest(block: bool = False) -> bool:
-            got = False
-            if block and inflight:
-                finish(*inflight.popleft())
-                got = True
-            pending = list(inflight)
-            inflight.clear()
-            for rec in pending:                 # out-of-order completion
-                if self._ready(rec[1]):
-                    finish(*rec)
-                    got = True
-                else:
-                    inflight.append(rec)
-            return got
-
-        while i < n or buf or inflight:
-            t = now()
+        while i < n or not w.idle():
+            t = sink.now()
             while i < n and arr[order[i]] <= t:
-                buf.append(int(order[i]))
+                w.submit(int(order[i]))
                 i += 1
-            flush = bool(buf) and (
-                len(buf) >= self.fill_threshold
-                or t - arr[buf[0]] >= self.wait_limit_s
-                or i >= n)                      # stream ended: drain
-            if flush:
-                take = buf[:max_bucket]
-                del buf[:len(take)]
-                res, _ = self._dispatch(q[take])     # async device dispatch
-                inflight.append((np.asarray(take), res, t))
-                flush_sizes.append(len(take))
-                if len(inflight) >= self.fifo_depth:
-                    harvest(block=True)         # FIFO flow control
+            if w.pump(t, drain=i >= n):
                 continue
-            if harvest(block=False):
+            if w.harvest(block=False):
                 continue
             nxt = arr[order[i]] if i < n else math.inf
-            if buf:
-                nxt = min(nxt, arr[buf[0]] + self.wait_limit_s)
-            if nxt is math.inf or not math.isfinite(nxt):
-                if inflight:
-                    harvest(block=True)
+            nxt = min(nxt, w.next_deadline())
+            if not math.isfinite(nxt):
+                if w.inflight:
+                    w.harvest(block=True)
                 continue
-            dt = nxt - now()
+            dt = nxt - sink.now()
             if dt > 0:                          # idle until next arrival or
                 time.sleep(min(dt, 5e-4))       # deadline; short naps keep
                                                 # dispatch responsive
-        makespan = now()
+        makespan = sink.now()
         return StreamReport(
-            ids=out_ids, dists=out_d, latency_s=lat,
+            ids=sink.out_ids, dists=sink.out_d, latency_s=sink.lat,
             qps=n / makespan if makespan > 0 else 0.0,
-            p50_ms=float(np.percentile(lat, 50)) * 1e3 if n else 0.0,
-            p99_ms=float(np.percentile(lat, 99)) * 1e3 if n else 0.0,
-            n_queries=n, n_flushes=len(flush_sizes), flush_sizes=flush_sizes,
-            compiles=self.engine.compile_count - compiles0,
+            p50_ms=percentile_ms(sink.lat, 50),
+            p99_ms=percentile_ms(sink.lat, 99),
+            n_queries=n, n_flushes=len(w.flush_sizes),
+            flush_sizes=w.flush_sizes, compiles=w.compiles,
             makespan_s=makespan,
             backend=getattr(getattr(self.engine, "scfg", None), "mode", ""))

@@ -38,12 +38,18 @@ def rerank(queries: jax.Array, cand_ids: jax.Array, vectors: jax.Array,
     dots = jnp.einsum("qd,qcd->qc", queries, cand)
     d2 = q2 + c2 - 2.0 * dots
 
-    # mask pads and duplicate ids (keep first occurrence): compare each id
-    # against all previous positions
-    c = cand_ids.shape[-1]
-    prev = cand_ids[:, None, :] == cand_ids[:, :, None]            # (Q, C, C)
-    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
-    dup = jnp.any(prev & tri[None], axis=-1)                       # (Q, C)
+    # mask pads and duplicate ids, keeping the first occurrence. Sort-based
+    # dedup is O(C log C) memory-linear (the old pairwise (Q, C, C) mask was
+    # quadratic in C = nprobe*ef): stable-argsort groups equal ids with the
+    # earliest original position first, adjacent-compare marks the rest of
+    # each run, and the inverse permutation scatters the flags back.
+    order = jnp.argsort(cand_ids, axis=-1, stable=True)            # (Q, C)
+    sorted_ids = jnp.take_along_axis(cand_ids, order, axis=-1)
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros_like(sorted_ids[:, :1], bool),
+         sorted_ids[:, 1:] == sorted_ids[:, :-1]], axis=-1)        # (Q, C)
+    inv = jnp.argsort(order, axis=-1, stable=True)
+    dup = jnp.take_along_axis(dup_sorted, inv, axis=-1)
     bad = (cand_ids < 0) | dup
     d2 = jnp.where(bad, jnp.inf, d2)
 

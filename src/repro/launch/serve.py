@@ -14,6 +14,12 @@ model embedding, not a logit slice); pass any ``QueryEncoder`` callable
 — or an ``ENCODERS`` registry name, resolved inside ``run`` where the
 engine dim is known — to ``run(..., query_encoder=...)`` to swap it.
 examples/rag_serve.py drives this path and demonstrates the swap.
+
+--fleet N shards the retrieval stream across N engine replicas through
+the FleetScheduler (core/fleet.py): round-robin / least-in-flight
+routing, bounded admission queue, credit backpressure, and optional
+deadline load shedding — the multi-engine serving tier in its
+production position.
 """
 
 from __future__ import annotations
@@ -28,6 +34,7 @@ import numpy as np
 
 from ..configs import get_smoke
 from ..core import compact_index, engine
+from ..core.fleet import FleetScheduler, replicate_engine
 from ..core.pipeline import StreamingScheduler, bucket_ladder
 from ..data.synthetic import clustered_vectors
 from ..models.model import build_model
@@ -87,7 +94,7 @@ ENCODERS: dict[str, Callable[..., QueryEncoder]] = {
 
 def run(arch: str, requests: int, prompt_len: int, gen: int,
         rag: bool = False, seed: int = 0, verbose: bool = True,
-        query_encoder: QueryEncoder | str | None = None):
+        query_encoder: QueryEncoder | str | None = None, fleet: int = 1):
     cfg = get_smoke(arch)
     model = build_model(cfg)
     key = jax.random.PRNGKey(seed)
@@ -100,9 +107,17 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
                                          knn_k=16)
         scfg = engine.SearchConfig(nprobe=2, ef=16, k=4)
         eng = engine.PIMCQGEngine.build(key, x, icfg, scfg, n_shards=2)
-        scheduler = StreamingScheduler(
-            eng, buckets=bucket_ladder(max(requests, 1)),
-            fill_threshold=max(requests // 2, 1), wait_limit_s=5e-3)
+        if fleet > 1:
+            # multi-engine tier: shard the decode-step query stream across
+            # `fleet` replicas behind admission control (core/fleet.py)
+            scheduler = FleetScheduler(
+                replicate_engine(eng, fleet),
+                buckets=bucket_ladder(max(requests, 1)),
+                fill_threshold=max(requests // 2, 1), wait_limit_s=5e-3)
+        else:
+            scheduler = StreamingScheduler(
+                eng, buckets=bucket_ladder(max(requests, 1)),
+                fill_threshold=max(requests // 2, 1), wait_limit_s=5e-3)
         if query_encoder is None:
             query_encoder = "mean-pool"
         if isinstance(query_encoder, str):
@@ -141,10 +156,19 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
         if retrieved is not None:
             print(f"[serve] rag: retrieved neighbor ids (first 4 reqs): "
                   f"{retrieved[:4, :4].tolist()}")
-            print(f"[serve] rag: scheduler buckets={scheduler.buckets} "
-                  f"flushes={rag_report.n_flushes} "
-                  f"compiles={rag_report.compiles} "
-                  f"p50={rag_report.p50_ms:.1f}ms")
+            if fleet > 1:
+                shares = [d["queries"] for d in rag_report.per_engine]
+                print(f"[serve] rag: fleet={fleet} ({rag_report.route}) "
+                      f"buckets={scheduler.buckets} "
+                      f"flushes={rag_report.n_flushes} "
+                      f"per-engine queries={shares} "
+                      f"shed={rag_report.shed_fraction:.2f} "
+                      f"p50={rag_report.p50_ms:.1f}ms")
+            else:
+                print(f"[serve] rag: scheduler buckets={scheduler.buckets} "
+                      f"flushes={rag_report.n_flushes} "
+                      f"compiles={rag_report.compiles} "
+                      f"p50={rag_report.p50_ms:.1f}ms")
     return np.asarray(toks), retrieved
 
 
@@ -158,9 +182,13 @@ def main():
     ap.add_argument("--encoder", default="mean-pool", choices=list(ENCODERS),
                     help="query encoder for --rag (default: probability-"
                          "weighted mean token embedding)")
+    ap.add_argument("--fleet", type=int, default=1,
+                    help="shard --rag retrieval across N engine replicas "
+                         "via the FleetScheduler (default 1: single-engine "
+                         "StreamingScheduler)")
     args = ap.parse_args()
     run(args.arch, args.requests, args.prompt_len, args.gen, args.rag,
-        query_encoder=args.encoder)
+        query_encoder=args.encoder, fleet=args.fleet)
 
 
 if __name__ == "__main__":

@@ -86,3 +86,58 @@ def test_route_lanes_inverse_map():
             s, l = divmod(slot, 16)
             assert lane_q[s, l] == qi
             assert lane_cl[s, l] == int(probe[qi, pi]) // 4
+
+
+def test_rerank_sort_dedup_matches_pairwise_reference():
+    """Regression for the (Q, C, C) pairwise dedup mask: the sort-based
+    dedup must keep exactly the FIRST occurrence of every candidate id
+    (and drop pads), matching the old quadratic mask bit-for-bit on a
+    duplicate-heavy candidate set."""
+    from repro.core.rerank import rerank
+    rng = np.random.default_rng(0)
+    Q, C, N, D, k = 7, 33, 200, 16, 5
+    ids = rng.integers(-1, 40, (Q, C)).astype(np.int32)   # dups + pads
+    ids[0, :] = -1                                        # all-pad row
+    ids[1, :] = 11                                        # one id repeated
+    q = rng.normal(size=(Q, D)).astype(np.float32)
+    v = rng.normal(size=(N, D)).astype(np.float32)
+    out = rerank(jnp.asarray(q), jnp.asarray(ids), jnp.asarray(v), k=k)
+
+    # reference: the old pairwise mask, in numpy
+    q2 = (q * q).sum(-1, keepdims=True)
+    cand = v[np.clip(ids, 0, None)]
+    d2 = q2 + (cand * cand).sum(-1) - 2 * np.einsum("qd,qcd->qc", q, cand)
+    prev = ids[:, None, :] == ids[:, :, None]
+    tri = np.tril(np.ones((C, C), bool), k=-1)
+    bad = (ids < 0) | (prev & tri[None]).any(-1)
+    d2 = np.where(bad, np.inf, d2)
+    pos = np.argsort(d2, axis=-1, kind="stable")[:, :k]
+    ref_ids = np.take_along_axis(ids, pos, -1)
+    ref_d = np.take_along_axis(d2, pos, -1)
+    ref_ids = np.where(np.isfinite(ref_d), ref_ids, -1)
+
+    np.testing.assert_array_equal(np.asarray(out.ids), ref_ids)
+    got_d = np.asarray(out.dists)
+    finite = np.isfinite(ref_d)
+    assert (np.isfinite(got_d) == finite).all()
+    np.testing.assert_allclose(got_d[finite], ref_d[finite],
+                               rtol=1e-5, atol=1e-4)
+    # the all-pad row yields no results, the single-id row exactly one
+    assert (np.asarray(out.ids)[0] == -1).all()
+    assert (np.asarray(out.ids)[1] == [11] + [-1] * (k - 1)).all()
+
+
+def test_rerank_dedup_no_quadratic_intermediate():
+    """The dedup path must not materialize a (Q, C, C) boolean — at
+    nprobe=8, ef=40 that was 102k bools/query. Largest allowed
+    intermediate is O(Q*C)."""
+    from repro.core.rerank import rerank
+    Q, C, D = 4, 320, 8                    # C = nprobe 8 * ef 40
+    jaxpr = jax.make_jaxpr(
+        lambda q, c, v: rerank(q, c, v, k=10))(
+        jnp.zeros((Q, D)), jnp.zeros((Q, C), jnp.int32), jnp.zeros((64, D)))
+    for eqn in jaxpr.jaxpr.eqns:
+        for var in eqn.outvars:
+            shape = getattr(var.aval, "shape", ())
+            assert np.prod(shape, dtype=np.int64) <= Q * C * D, (
+                eqn.primitive, shape)

@@ -196,6 +196,36 @@ def test_scheduler_compiles_at_most_ladder(eng_q):
     assert rep.compiles <= 2
 
 
+def test_scheduler_rejects_degenerate_args(eng_q):
+    """Regression: an explicit fill_threshold=0 used to be silently treated
+    as 'unset' (the `or` default) and non-positive wait/fifo args were
+    accepted; all three are now hard errors."""
+    eng, _ = eng_q
+    with pytest.raises(ValueError, match="fill_threshold"):
+        StreamingScheduler(eng, buckets=(8,), fill_threshold=0)
+    with pytest.raises(ValueError, match="wait_limit_s"):
+        StreamingScheduler(eng, buckets=(8,), wait_limit_s=0.0)
+    with pytest.raises(ValueError, match="wait_limit_s"):
+        StreamingScheduler(eng, buckets=(8,), wait_limit_s=-1e-3)
+    with pytest.raises(ValueError, match="fifo_depth"):
+        StreamingScheduler(eng, buckets=(8,), fifo_depth=0)
+    with pytest.raises(ValueError, match="buckets"):
+        StreamingScheduler(eng, buckets=(0, 8))
+    # None still means "default to the largest bucket"
+    assert StreamingScheduler(eng, buckets=(4, 8)).fill_threshold == 8
+
+
+def test_stream_report_percentiles_nan_safe():
+    """A partially-failed run (NaN latencies for queries that never
+    completed) reports percentiles over the finished queries, and an
+    all-failed run reports NaN — never a fabricated 0."""
+    from repro.core.pipeline import percentile_ms
+    lat = np.array([1e-3, 2e-3, np.nan, 3e-3])
+    assert percentile_ms(lat, 50) == pytest.approx(2.0)
+    assert np.isnan(percentile_ms(np.array([np.nan, np.nan]), 99))
+    assert np.isnan(percentile_ms(np.array([]), 50))
+
+
 def test_scheduler_adopts_engine_ladder_without_mutating_it():
     x, _ = clustered_vectors(9, 800, 32, 8)
     icfg = compact_index.IndexConfig(dim=32, n_clusters=8, degree=8, knn_k=16)
