@@ -1,8 +1,22 @@
-"""Shared benchmark substrate: corpora, engines, timing, recall."""
+"""Shared benchmark substrate: corpora, engines, timing, recall.
+
+Smoke mode (``BENCH_SMOKE=1`` or ``benchmarks.run --smoke``) caps the
+expensive knobs — stream durations, sweep widths, timing iterations — so
+the whole suite runs in CI minutes while every embedded perf-claim
+assertion still executes. Corpus sizes and search configs are NOT changed
+by smoke mode: the claims (recall thresholds, parity, plateau shapes)
+hold on the same index they were calibrated on.
+
+Claims are asserted with ``check`` (not a bare ``assert``): it survives
+``python -O`` and raises ``ClaimFailed``, which ``benchmarks/run.py``
+turns into a non-zero exit so a failed claim gates CI instead of
+scrolling by.
+"""
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 
 import numpy as np
@@ -10,6 +24,24 @@ import jax
 
 from repro.core import compact_index, engine
 from repro.data.synthetic import clustered_vectors, ground_truth, query_set
+
+SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
+class ClaimFailed(AssertionError):
+    """A paper/perf claim embedded in a benchmark did not hold."""
+
+
+def check(cond: bool, msg: str) -> None:
+    """Assert a benchmark claim; never stripped by -O, always fails the
+    run (benchmarks/run.py exits non-zero on any ClaimFailed)."""
+    if not cond:
+        raise ClaimFailed(msg)
+
+
+def smoke_cap(full, smoke):
+    """Pick the full-size or smoke-size value for a benchmark knob."""
+    return smoke if SMOKE else full
 
 # paper-matched dataset stats (dim; billion-scale footprints are computed
 # analytically — the in-memory corpora are distribution-matched samples)
@@ -56,8 +88,12 @@ def recall_at10(ids: np.ndarray, gt: np.ndarray) -> float:
                           for i in range(len(gt))]))
 
 
-def timed_qps(fn, queries, *, warmup: int = 1, iters: int = 3):
-    """(result_of_last_call, qps, seconds_per_batch)."""
+def timed_qps(fn, queries, *, warmup: int = 1, iters: int | None = None):
+    """(result_of_last_call, qps, seconds_per_batch). iters defaults to 3,
+    or 1 in smoke mode (claims built on timing RATIOS should pass iters
+    explicitly)."""
+    if iters is None:
+        iters = 1 if SMOKE else 3
     for _ in range(warmup):
         out = fn(queries)
         jax.block_until_ready(getattr(out[0], "ids", out[0]))

@@ -14,14 +14,18 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import engine
-from .common import POWER, build_engine, fmt_row, make_workload, recall_at10, timed_qps
+from .common import (POWER, SMOKE, build_engine, fmt_row, make_workload,
+                     recall_at10, timed_qps)
 
 
 def sweep(dataset: str = "SIFT", verbose: bool = True) -> list[str]:
     w = make_workload(dataset)
     rows = []
-    for nprobe, ef in [(2, 10), (2, 20), (4, 20), (4, 40), (6, 40),
-                       (6, 80), (8, 80), (8, 120)]:
+    points = [(2, 10), (2, 20), (4, 20), (4, 40), (6, 40),
+              (6, 80), (8, 80), (8, 120)]
+    if SMOKE:
+        points = [(2, 10), (4, 40), (8, 120)]
+    for nprobe, ef in points:
         scfg = engine.SearchConfig(nprobe=nprobe, ef=ef, k=10)
         eng = build_engine(w, scfg)
         (res, _), qps, dt = timed_qps(lambda q: eng.search(q), w.q)

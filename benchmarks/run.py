@@ -1,9 +1,19 @@
 """Benchmark driver — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig16,tab2]
+        [--smoke] [--out-dir bench-artifacts]
 
 Prints ``name,us_per_call,derived`` CSV lines per artifact (plus section
-headers). Modules:
+headers). Exits NON-ZERO if any module raises or any embedded perf-claim
+assertion (``common.check`` -> ClaimFailed) fails, so the CI bench-smoke
+lane gates on the claims instead of letting a failed one scroll by.
+
+--smoke (or env BENCH_SMOKE=1) caps stream durations / sweep widths /
+timing iterations for CI; every claim assertion still runs.
+--out-dir writes one ``BENCH_<tag>.json`` per module ({tag, module, ok,
+error, rows, seconds, smoke}) for upload as a workflow artifact.
+
+Modules:
 
     index_size      Table II   index footprint
     qps_recall      Fig 10/11  QPS + QPS/W vs recall frontier
@@ -14,7 +24,7 @@ headers). Modules:
     breakdown       Fig 14     five-stage pipeline breakdown
     mulfree_bench   Fig 17/9   shift-add kernel time + recall delta
     pim_baselines   Fig 13     IVF-PQ recall ceiling vs PIMCQG
-    multinode       Fig 18     400GbE scale-out model
+    multinode       Fig 18     sharded-fleet scatter/gather + IB model
     pim_arch        Fig 19     PIM-HBM / AiM projection
     roofline_table  Fig 1 + §Roofline table from dry-run artifacts
 """
@@ -22,6 +32,8 @@ headers). Modules:
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -44,8 +56,17 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="cap workload sizes for CI (same as BENCH_SMOKE=1)")
+    ap.add_argument("--out-dir", default=None,
+                    help="write one BENCH_<tag>.json per module here")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.smoke:
+        # must be set BEFORE benchmarks.common is imported by any module
+        os.environ["BENCH_SMOKE"] = "1"
+    if args.out_dir:
+        os.makedirs(args.out_dir, exist_ok=True)
 
     import importlib
     failures = []
@@ -54,13 +75,24 @@ def main() -> None:
             continue
         print(f"# === {tag} ({mod_name}) ===", flush=True)
         t0 = time.time()
+        rows, err = None, None
         try:
             mod = importlib.import_module(f"benchmarks.{mod_name}")
-            mod.run(verbose=True)
+            rows = mod.run(verbose=True)
         except Exception as e:                              # noqa: BLE001
             failures.append((tag, repr(e)))
+            err = repr(e)
             print(f"{tag},ERROR,{e!r}", flush=True)
-        print(f"# {tag} done in {time.time() - t0:.1f}s", flush=True)
+        dt = time.time() - t0
+        print(f"# {tag} done in {dt:.1f}s", flush=True)
+        if args.out_dir:
+            with open(os.path.join(args.out_dir, f"BENCH_{tag}.json"),
+                      "w") as f:
+                json.dump({"tag": tag, "module": mod_name,
+                           "ok": err is None, "error": err,
+                           "rows": rows, "seconds": round(dt, 2),
+                           "smoke": os.environ.get("BENCH_SMOKE", "")
+                           not in ("", "0")}, f, indent=1)
     if failures:
         print(f"# FAILURES: {failures}")
         sys.exit(1)

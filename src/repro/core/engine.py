@@ -127,9 +127,12 @@ def route_lanes(probe_cids: jax.Array, shard_of: jax.Array, local_slot: jax.Arra
                 *, n_shards: int, capacity: int):
     """Build static-shape per-shard lane tables.
 
-    probe_cids (Q, P) global cluster ids -> for shard s: lane_q (S, L),
+    probe_cids (Q, P) cluster ids -> for shard s: lane_q (S, L),
     lane_cl (S, L) local cluster slots (-1 pad); plus the inverse map
     (Q, P) -> flat slot into the (S*L,) result array for candidate gather.
+    A probe id of -1 marks a hole (a probed cluster owned by a DIFFERENT
+    engine in the sharded fleet tier) — its lane is masked exactly like a
+    pad query's and never occupies capacity nor counts as dropped.
 
     valid_q (Q,) bool marks real queries; lanes of pad queries (bucketed
     batches) are routed to a sentinel shard that sorts after every real
@@ -143,10 +146,11 @@ def route_lanes(probe_cids: jax.Array, shard_of: jax.Array, local_slot: jax.Arra
     q, p = probe_cids.shape
     flat_cid = probe_cids.reshape(-1)                      # (QP,)
     flat_q = jnp.repeat(jnp.arange(q, dtype=jnp.int32), p)
-    lane_shard = shard_of[flat_cid]                        # (QP,)
+    live = flat_cid >= 0
+    lane_shard = shard_of[jnp.clip(flat_cid, 0)]           # (QP,)
     if valid_q is not None:
-        live = jnp.repeat(valid_q, p)
-        lane_shard = jnp.where(live, lane_shard, n_shards)
+        live = live & jnp.repeat(valid_q, p)
+    lane_shard = jnp.where(live, lane_shard, n_shards)
     order = jnp.argsort(lane_shard, stable=True)
     sh_sorted = lane_shard[order]
     # position within shard = index - first index of that shard
@@ -163,7 +167,7 @@ def route_lanes(probe_cids: jax.Array, shard_of: jax.Array, local_slot: jax.Arra
     lane_q = jnp.full((n_shards * capacity,), -1, jnp.int32)
     lane_cl = jnp.full((n_shards * capacity,), -1, jnp.int32)
     src_q = flat_q[order]
-    src_cl = local_slot[flat_cid[order]].astype(jnp.int32)
+    src_cl = local_slot[jnp.clip(flat_cid[order], 0)].astype(jnp.int32)
     lane_q = lane_q.at[dest].set(src_q, mode="drop")
     lane_cl = lane_cl.at[dest].set(src_cl, mode="drop")
 
@@ -292,6 +296,88 @@ class PIMCQGEngine:
             return rerank_mod.RerankResult(ids, dists), stats
 
         return search_step
+
+    def _build_probed_fn(self, bucket: int, p: int):
+        """Like _build_search_fn but the probed clusters are an INPUT (local
+        cluster ids, -1 = hole) instead of being chosen by cluster_filter —
+        the partial-search entry point of the sharded fleet tier, where the
+        origin host owns probe selection and this engine owns only a
+        disjoint cluster slice. One executable per (bucket, P) shape."""
+        cfg, dim = self.scfg, self.icfg.dim
+        s = self.place.n_shards
+        capacity = _lane_capacity(bucket, p, s, cfg.lane_capacity_factor)
+        cap_table = jnp.asarray(
+            [_lane_capacity(n, p, s, cfg.lane_capacity_factor)
+             for n in range(bucket + 1)], jnp.int32)
+        shard_fn = _make_shard_search(cfg, dim)
+
+        @jax.jit
+        def probed_step(placed: PlacedIndex, rotation, vectors, queries,
+                        probe, n_valid):
+            valid = jnp.arange(bucket, dtype=jnp.int32) < n_valid
+            cap_valid = cap_table[jnp.clip(n_valid, 0, bucket)]
+            lane_q, lane_cl, inv, dropped = route_lanes(
+                probe, self.shard_of, self.local_slot, valid, cap_valid,
+                n_shards=s, capacity=capacity)
+            gids, rank, hops = jax.vmap(
+                shard_fn, in_axes=(0, None, None, 0, 0))(
+                placed, rotation, queries, lane_q, lane_cl)
+            flat_gids = gids.reshape(s * capacity, cfg.ef)
+            safe = jnp.clip(inv, 0)                          # (Q, P)
+            cand = flat_gids[safe]                           # (Q, P, EF)
+            cand = jnp.where((inv >= 0)[..., None], cand, -1)
+            cand = cand.reshape(bucket, p * cfg.ef)
+            out = rerank_mod.rerank(queries, cand, vectors, k=cfg.k)
+            ids = jnp.where(valid[:, None], out.ids, -1)
+            dists = jnp.where(valid[:, None], out.dists, jnp.inf)
+            stats = SearchStats(hops=hops, dropped_lanes=dropped)
+            return rerank_mod.RerankResult(ids, dists), stats
+
+        return probed_step
+
+    def search_probed(self, queries, probe, *, pad_to: int | None = None
+                      ) -> tuple[rerank_mod.RerankResult, SearchStats]:
+        """Partial search over an EXPLICIT probe set (sharded fleet tier).
+
+        probe (Q, P) int32 — per-query local cluster ids to search; -1
+        entries are holes (probes owned by other engines) and contribute
+        nothing. Returns the exact-reranked top-k over exactly those
+        clusters; a row of all -1 probes yields ids -1 / dists inf. With
+        pad_to=B the (cached) B-shaped executable is reused and results for
+        real rows are identical to an unpadded call, like ``search``."""
+        queries = jnp.asarray(queries, jnp.float32)
+        probe = np.asarray(probe, np.int32)
+        nq = queries.shape[0]
+        if probe.shape[0] != nq:
+            raise ValueError(f"probe rows {probe.shape[0]} != queries {nq}")
+        # local ids only — catching global-vs-local cid confusion here beats
+        # XLA's silent gather clamp searching the wrong cluster downstream
+        if probe.size and int(probe.max()) >= self.index.n_clusters:
+            raise ValueError(
+                f"probe id {int(probe.max())} out of range for this "
+                f"engine's {self.index.n_clusters} local clusters — "
+                f"search_probed takes LOCAL cluster ids (did you pass "
+                f"global ids from cluster_filter on an unpartitioned "
+                f"centroid set?)")
+        probe = jnp.asarray(probe)
+        p = probe.shape[1]
+        b = nq if pad_to is None else int(pad_to)
+        if b < nq:
+            raise ValueError(f"pad_to={b} < batch size {nq}")
+        if b > nq:
+            queries = jnp.concatenate(
+                [queries, jnp.zeros((b - nq, queries.shape[1]), jnp.float32)])
+            probe = jnp.concatenate(
+                [probe, jnp.full((b - nq, p), -1, jnp.int32)])
+        key = ("probed", b, p)
+        if key not in self._search_cache:
+            self._search_cache[key] = self._build_probed_fn(b, p)
+        fn = self._search_cache[key]
+        out, stats = fn(self.placed, self.index.rotation, self.host.vectors,
+                        queries, probe, jnp.int32(nq))
+        if b > nq:
+            out = rerank_mod.RerankResult(out.ids[:nq], out.dists[:nq])
+        return out, stats
 
     def search(self, queries, *, pad_to: int | None = None
                ) -> tuple[rerank_mod.RerankResult, SearchStats]:

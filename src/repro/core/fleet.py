@@ -31,6 +31,21 @@ Admitted queries flow through the exact same padded/bucketed
 ``engine.search(pad_to=...)`` path as a single engine, into one shared
 ``StreamSink`` — their results are bit-identical to an unpadded
 single-engine search of the same stream.
+
+``ShardedFleet`` is the second tier (paper Fig 18's multi-node story,
+UpANNS/DRIM-ANN cluster sharding): instead of replicating the whole index
+per engine, ``partition_engine`` PARTITIONS the clusters across N engines
+with ``placement.greedy_place`` (each engine's PlacedIndex holds only its
+disjoint cluster slice, optionally under a strict per-engine memory
+budget). The origin host runs the IVF top-probe selection once, SCATTERS
+each query only to the <= nprobe engines owning its probed clusters
+(``ivf.split_probes_by_owner``), each engine answers with a partial top-k
+over exactly those clusters (``engine.search_probed``), and the origin
+GATHERS the partials and merges them through the existing sort-based
+rerank path — bit-identical to a single engine searching the same probed
+clusters. Routing is heterogeneity-aware: every shard declares its
+ranking backend (``scfg.mode``), and a query may request a backend, in
+which case only matching shards' clusters are searched.
 """
 
 from __future__ import annotations
@@ -41,12 +56,19 @@ import math
 import time
 from collections import deque
 
+import jax.numpy as jnp
 import numpy as np
 
+from . import compact_index as compact_index_mod
+from . import engine as engine_mod
+from . import ivf as ivf_mod
+from . import placement as placement_mod
+from . import rerank as rerank_mod
 from .pipeline import (EngineWorker, StageCosts, StreamSink, percentile_ms,
                        resolve_stream_params)
 
-__all__ = ["FleetScheduler", "FleetReport", "replicate_engine"]
+__all__ = ["FleetScheduler", "FleetReport", "replicate_engine",
+           "ShardedFleet", "ShardedReport", "partition_engine"]
 
 ROUTE_POLICIES = ("round-robin", "least-in-flight")
 
@@ -268,3 +290,347 @@ class FleetScheduler:
             per_engine=per_engine, makespan_s=makespan, route=self.route,
             backend=getattr(getattr(self.engines[0], "scfg", None),
                             "mode", ""))
+
+
+# ---------------------------------------------------------------------------
+# Sharded fleet tier: partition the index across engines (paper Fig 18)
+# ---------------------------------------------------------------------------
+
+
+def partition_engine(eng, n_parts: int, *, mem_budget: int | None = None,
+                     strict: bool = False, modes=None, inner_shards: int = 1,
+                     freq: np.ndarray | None = None,
+                     **stream_kw) -> "ShardedFleet":
+    """Partition one built engine's clusters across ``n_parts`` engines.
+
+    Unlike ``replicate_engine`` (N schedulable views of ONE index copy),
+    each partition engine holds a DISJOINT cluster slice chosen by
+    ``placement.greedy_place`` over (freq, compact bytes) — per-engine
+    memory scales down ~1/N, the way billion-scale PIM cluster deployments
+    must shard. ``mem_budget`` (compact-index bytes) caps each partition;
+    with ``strict=True`` an infeasible partitioning raises instead of
+    silently overflowing a node. ``modes`` optionally gives each partition
+    its own RankingBackend registry key (a heterogeneous fleet — queries
+    may then request a backend and are routed only to matching shards).
+    ``inner_shards`` is each partition's intra-engine model-axis shard
+    count. The host store (raw rerank vectors, global-id addressed) stays
+    shared: per-shard rerank needs no id translation.
+
+    Extra keyword args flow to the ShardedFleet stream parameters
+    (buckets, fill_threshold, wait_limit_s, fifo_depth, ...).
+    """
+    if n_parts < 1:
+        raise ValueError(f"need at least one partition, got {n_parts}")
+    if modes is not None and len(modes) != n_parts:
+        raise ValueError(f"modes has {len(modes)} entries for {n_parts} "
+                         f"partitions")
+    idx, icfg = eng.index, eng.icfg
+    sizes = np.asarray(idx.n_valid).astype(np.float64)
+    bpc = sizes * compact_index_mod.compact_bytes_per_node(icfg.dim,
+                                                           icfg.degree)
+    if freq is None:
+        freq = sizes                      # popularity ~ size as prior
+    pl = placement_mod.greedy_place(np.asarray(freq, np.float64), bpc,
+                                    n_parts, mem_budget=mem_budget,
+                                    strict=strict)
+    engines = []
+    for o in range(n_parts):
+        members = pl.order[o * pl.per_shard:(o + 1) * pl.per_shard]
+        sub = compact_index_mod.CompactIndex(
+            codes=idx.codes[members], f_add=idx.f_add[members],
+            neighbors=idx.neighbors[members], entry=idx.entry[members],
+            n_valid=idx.n_valid[members], node_ids=idx.node_ids[members],
+            centroids=idx.centroids[members], alpha=idx.alpha[members],
+            rho=idx.rho[members], shift1=idx.shift1[members],
+            shift2=idx.shift2[members],
+            residual_norm=idx.residual_norm[members],
+            cos_theta=idx.cos_theta[members],
+            rotation=idx.rotation, dim=idx.dim)
+        sub_pl = placement_mod.greedy_place(sizes[members], bpc[members],
+                                            inner_shards)
+        scfg = dataclasses.replace(eng.scfg, mode=modes[o]) \
+            if modes is not None else eng.scfg
+        engines.append(engine_mod.PIMCQGEngine(sub, eng.host, sub_pl, icfg,
+                                               scfg, buckets=eng.buckets))
+    return ShardedFleet(engines, part_of=pl.shard_of,
+                        local_cid=pl.local_slot, centroids=idx.centroids,
+                        **stream_kw)
+
+
+class ShardWorker(EngineWorker):
+    """EngineWorker over one PARTITION of the index. A flush carries the
+    per-query probe rows for this engine's clusters (the scatter payload,
+    consumed by ``engine.search_probed``), and a harvest deposits PARTIAL
+    top-k into the ShardedSink's gather slots instead of final results."""
+
+    def __init__(self, engine, sink: "ShardedSink", *, probes: np.ndarray,
+                 slot: np.ndarray, **kw):
+        super().__init__(engine, sink, **kw)
+        self.probes = probes              # (N, P) local cluster ids, -1 hole
+        self.slot = slot                  # (N,) this shard's gather slot
+
+    def _dispatch(self, take):
+        nq = len(take)
+        for b in self.buckets:
+            if b >= nq:
+                return self.engine.search_probed(
+                    self.sink.q[take], self.probes[take], pad_to=b)
+        raise AssertionError(
+            f"flush of {nq} exceeds max bucket {self.buckets[-1]}")
+
+    def _finish(self, idxs, res, _t_dispatch):
+        self.sink.finish_partial(idxs, self.slot[idxs],
+                                 np.asarray(res.ids), np.asarray(res.dists))
+
+
+class ShardedSink(StreamSink):
+    """StreamSink plus the gather stage of the sharded tier: a per-query
+    buffer of each owning shard's partial top-k (slot-major), a countdown
+    of outstanding shards, and the queue of fully-gathered queries awaiting
+    the origin's merge rerank."""
+
+    def __init__(self, queries: np.ndarray, arrivals: np.ndarray, k: int,
+                 fanout: int):
+        super().__init__(queries, arrivals, k)
+        n = len(queries)
+        self.k = k
+        self.part_ids = np.full((n, fanout * k), -1, np.int32)
+        self.part_d = np.full((n, fanout * k), np.inf, np.float32)
+        self.pending = np.zeros(n, np.int32)
+        self.ready: deque = deque()       # (idx, gather-complete time)
+
+    def finish_partial(self, idxs: np.ndarray, slots: np.ndarray,
+                       ids: np.ndarray, dists: np.ndarray):
+        cols = slots[:, None] * self.k + np.arange(self.k)
+        self.part_ids[idxs[:, None], cols] = ids
+        self.part_d[idxs[:, None], cols] = dists
+        self.pending[idxs] -= 1
+        t = self.now()
+        for i in idxs[self.pending[idxs] == 0]:
+            self.ready.append((int(i), t))
+
+
+@dataclasses.dataclass
+class ShardedReport:
+    """Per-stream output of ShardedFleet.run. A query no shard serves (the
+    backend filter removed every owner of its probes) keeps the sink
+    defaults (ids -1, dists inf), is counted in ``n_unrouted``, and
+    completes at arrival."""
+    ids: np.ndarray          # (N, k) int32, submission order
+    dists: np.ndarray        # (N, k) f32 exact squared distances
+    latency_s: np.ndarray    # (N,) completion - arrival
+    qps: float
+    p50_ms: float
+    p99_ms: float
+    n_queries: int
+    n_flushes: int           # scatter flushes summed over shards
+    flush_sizes: list
+    n_merges: int            # origin gather/merge flushes
+    merge_sizes: list
+    fanout_mean: float       # mean shards scattered to per query
+    n_unrouted: int
+    per_engine: list         # per-shard dicts: backend/flushes/queries/...
+    makespan_s: float
+    backends: list           # per-shard declared backend (scfg.mode)
+
+
+class ShardedFleet:
+    """Scatter/gather serving over a PARTITIONED index (paper Fig 18).
+
+    The origin host runs the IVF top-probe selection once per query (the
+    same ``cluster_filter`` a single engine jits), scatters the query only
+    to the <= nprobe engines owning its probed clusters, each engine
+    beam-searches exactly those clusters and returns an exact-reranked
+    partial top-k, and the origin merges the gathered partials through the
+    same sort-based rerank path — bit-identical to a single engine
+    searching the same probed clusters (clusters partition the corpus, so
+    cross-shard candidates never collide and exact distances recomputed on
+    the origin reproduce the single-engine ranking). The parity contract
+    presumes no lane-capacity overflow on either side: under extreme
+    cluster-popularity skew a multi-inner-shard reference engine can drop
+    lanes (``SearchStats.dropped_lanes``) where a 1-inner-shard partition
+    cannot, and candidate sets then legitimately differ — size
+    ``lane_capacity_factor`` for zero drops when parity matters.
+
+    Heterogeneity-aware routing: each shard declares its ranking backend
+    (``scfg.mode``); ``run(..., backend=...)`` restricts a query (or each
+    query, with a per-query list) to shards whose backend matches — probes
+    owned by non-matching shards are skipped, and a query whose every
+    probe is filtered out completes unrouted (ids -1)."""
+
+    def __init__(self, engines, part_of, local_cid, centroids, *,
+                 buckets=None, costs: StageCosts | None = None,
+                 fill_threshold: int | None = None,
+                 wait_limit_s: float = 2e-3, fifo_depth: int = 4,
+                 max_batch: int = 64):
+        if not engines:
+            raise ValueError("ShardedFleet needs at least one engine")
+        ks = {e.scfg.k for e in engines}
+        if len(ks) != 1:
+            raise ValueError(f"engines disagree on k: {sorted(ks)}")
+        nps = {e.scfg.nprobe for e in engines}
+        if len(nps) != 1:
+            raise ValueError(f"engines disagree on nprobe: {sorted(nps)}")
+        self.engines = list(engines)
+        self.part_of = np.asarray(part_of, np.int32)
+        self.local_cid = np.asarray(local_cid, np.int32)
+        self.centroids = jnp.asarray(centroids)
+        if not (len(self.part_of) == len(self.local_cid)
+                == self.centroids.shape[0]):
+            raise ValueError("part_of/local_cid/centroids disagree on the "
+                             "cluster count")
+        counts = np.bincount(self.part_of, minlength=len(self.engines))
+        for o, e in enumerate(self.engines):
+            if counts[o] != e.index.n_clusters:
+                raise ValueError(
+                    f"engine {o} holds {e.index.n_clusters} clusters but "
+                    f"part_of assigns it {counts[o]}")
+        self.k = engines[0].scfg.k
+        self.nprobe = engines[0].scfg.nprobe
+        self.modes = [e.scfg.mode for e in engines]
+        self.vectors = engines[0].host.vectors
+        (self.buckets, self.fill_threshold, self.wait_limit_s,
+         self.fifo_depth) = resolve_stream_params(
+            engines[0], buckets, costs, fill_threshold, wait_limit_s,
+            fifo_depth, max_batch)
+        self.fanout = max(1, min(self.nprobe, len(self.engines)))
+
+    # -- scatter routing ------------------------------------------------------
+    def _route(self, q: np.ndarray, backend):
+        """① IVF top-probe selection on the origin, ② backend match filter,
+        ③ per-owner scatter split. Returns (tables (O, N, P), touches
+        (N, O))."""
+        probe = np.asarray(ivf_mod.cluster_filter(
+            jnp.asarray(q), self.centroids, nprobe=self.nprobe)[0])
+        live = None
+        if backend is not None:
+            req = np.full(len(q), backend, object) \
+                if isinstance(backend, str) \
+                else np.asarray(list(backend), object)
+            if len(req) != len(q):
+                raise ValueError(
+                    f"backend list length {len(req)} != {len(q)} queries")
+            known = set(self.modes)
+            missing = {b for b in req.tolist() if b is not None} - known
+            if missing:
+                raise ValueError(
+                    f"no shard serves backend(s) {sorted(missing)}; this "
+                    f"fleet serves {sorted(known)}")
+            modes = np.asarray(self.modes, object)
+            match_all = np.asarray([b is None for b in req.tolist()])
+            live = (modes[self.part_of[probe]] == req[:, None]) \
+                | match_all[:, None]
+        return ivf_mod.split_probes_by_owner(
+            probe, self.part_of, self.local_cid, len(self.engines),
+            live=live)
+
+    # -- origin gather/merge --------------------------------------------------
+    def _merge(self, sink: ShardedSink, t: float, drain: bool,
+               merge_sizes: list) -> bool:
+        """Merge fully-gathered queries' per-shard partial top-k through the
+        existing sort-based rerank path (exact distances recomputed from the
+        shared host store), flushed in bucket-padded batches like any other
+        stage so merging adds at most len(buckets) executables."""
+        if not sink.ready:
+            return False
+        if not (len(sink.ready) >= self.fill_threshold or drain
+                or t - sink.ready[0][1] >= self.wait_limit_s):
+            return False
+        take = []
+        while sink.ready and len(take) < self.buckets[-1]:
+            take.append(sink.ready.popleft()[0])
+        take = np.asarray(take)
+        nq = len(take)
+        b = next(bb for bb in self.buckets if bb >= nq)
+        qb = np.zeros((b, sink.q.shape[1]), np.float32)
+        qb[:nq] = sink.q[take]
+        cb = np.full((b, sink.part_ids.shape[1]), -1, np.int32)
+        cb[:nq] = sink.part_ids[take]
+        out = rerank_mod.rerank(jnp.asarray(qb), jnp.asarray(cb),
+                                self.vectors, k=self.k)
+        sink.finish(take, np.asarray(out.ids)[:nq], np.asarray(out.dists)[:nq])
+        merge_sizes.append(nq)
+        return True
+
+    # -- the run loop ---------------------------------------------------------
+    def run(self, queries, arrival_times=None, backend=None) -> ShardedReport:
+        """Replay a (possibly timed) stream through the sharded fleet; see
+        StreamingScheduler.run for the arrival-replay semantics. ``backend``
+        (None | registry key | per-query sequence of keys/None) restricts
+        each query to matching shards."""
+        q = np.asarray(queries, np.float32)
+        n = len(q)
+        arr = np.zeros(n) if arrival_times is None \
+            else np.asarray(arrival_times, np.float64)
+        order = np.argsort(arr, kind="stable")
+        tables, touches = self._route(q, backend)
+        slots = np.cumsum(touches, axis=1) - 1
+        pending = touches.sum(axis=1).astype(np.int32)
+        sink = ShardedSink(q, arr, self.k, self.fanout)
+        sink.pending[:] = pending
+        workers = [ShardWorker(e, sink, probes=tables[o], slot=slots[:, o],
+                               buckets=self.buckets,
+                               fill_threshold=self.fill_threshold,
+                               wait_limit_s=self.wait_limit_s,
+                               fifo_depth=self.fifo_depth)
+                   for o, e in enumerate(self.engines)]
+        merge_sizes: list = []
+        none_ids = np.full((1, self.k), -1, np.int32)
+        none_d = np.full((1, self.k), np.inf, np.float32)
+        i = 0
+        while i < n or not all(w.idle() for w in workers) or sink.ready:
+            t = sink.now()
+            # 1. arrivals: scatter each query to the shards owning its probes
+            while i < n and arr[order[i]] <= t:
+                idx = int(order[i])
+                i += 1
+                if pending[idx] == 0:     # unrouted: completes at arrival
+                    sink.finish(np.asarray([idx]), none_ids, none_d)
+                    continue
+                for o in np.nonzero(touches[idx])[0]:
+                    workers[int(o)].submit(idx)
+            # 2. pump + harvest every shard non-blocking, then merge gathered
+            drain = i >= n
+            progress = False
+            for w in workers:
+                progress |= w.pump(t, drain=drain, block_when_full=False)
+            for w in workers:
+                progress |= w.harvest(block=False)
+            progress |= self._merge(sink, t, drain, merge_sizes)
+            if progress:
+                continue
+            # 3. idle: nap until the next arrival / flush / merge deadline,
+            # or block on a shard's device if that is all that's left
+            nxt = arr[order[i]] if i < n else math.inf
+            for w in workers:
+                nxt = min(nxt, w.next_deadline())
+            if sink.ready:
+                nxt = min(nxt, sink.ready[0][1] + self.wait_limit_s)
+            if not math.isfinite(nxt):
+                for w in workers:
+                    if w.inflight:
+                        w.harvest(block=True)
+                        break
+                continue
+            dt = nxt - sink.now()
+            time.sleep(min(max(dt, 5e-5), 5e-4))
+        makespan = sink.now()
+
+        flush_sizes = [s for w in workers for s in w.flush_sizes]
+        per_engine = [{"engine": o, "backend": self.modes[o],
+                       "flushes": len(w.flush_sizes),
+                       "queries": int(sum(w.flush_sizes)),
+                       "max_in_flight": w.max_in_flight,
+                       "clusters": int(self.engines[o].index.n_clusters)}
+                      for o, w in enumerate(workers)]
+        return ShardedReport(
+            ids=sink.out_ids, dists=sink.out_d, latency_s=sink.lat,
+            qps=n / makespan if makespan > 0 else 0.0,
+            p50_ms=percentile_ms(sink.lat, 50),
+            p99_ms=percentile_ms(sink.lat, 99),
+            n_queries=n, n_flushes=len(flush_sizes),
+            flush_sizes=flush_sizes, n_merges=len(merge_sizes),
+            merge_sizes=merge_sizes,
+            fanout_mean=float(pending.mean()) if n else 0.0,
+            n_unrouted=int((pending == 0).sum()), per_engine=per_engine,
+            makespan_s=makespan, backends=list(self.modes))

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["KMeansResult", "kmeans", "assign", "cluster_filter", "bincount_sizes"]
+__all__ = ["KMeansResult", "kmeans", "assign", "cluster_filter",
+           "bincount_sizes", "split_probes_by_owner"]
 
 
 class KMeansResult(NamedTuple):
@@ -102,3 +103,35 @@ def cluster_filter(queries: jax.Array, centroids: jax.Array, *, nprobe: int):
 
 def bincount_sizes(assignment: np.ndarray, k: int) -> np.ndarray:
     return np.bincount(assignment, minlength=k).astype(np.int32)
+
+
+def split_probes_by_owner(probe_cids: np.ndarray, owner_of: np.ndarray,
+                          local_cid: np.ndarray, n_owners: int,
+                          live: np.ndarray | None = None
+                          ) -> tuple[np.ndarray, np.ndarray]:
+    """Scatter-routing split of the IVF top-probe selection (host side).
+
+    The sharded fleet tier partitions clusters across engines; each query is
+    routed only to the owners of its probed clusters. Given ``probe_cids``
+    (Q, P) global cluster ids from :func:`cluster_filter`, ``owner_of`` (C,)
+    owning engine per cluster, and ``local_cid`` (C,) the cluster's id
+    within its owner, returns:
+
+      tables  (O, Q, P) int32 — per-owner probe tables in the owner's LOCAL
+              cluster ids, -1 where the probe belongs to another owner (the
+              payload each engine's ``search_probed`` consumes);
+      touches (Q, O) bool — which owners each query must scatter to.
+
+    ``live`` (Q, P) bool optionally masks individual probes out (e.g. probes
+    whose owner's backend does not match the query's requested backend in
+    heterogeneous routing).
+    """
+    probe_cids = np.asarray(probe_cids)
+    own = np.asarray(owner_of)[probe_cids]                 # (Q, P)
+    if live is not None:
+        own = np.where(live, own, -1)
+    local = np.where(own >= 0, np.asarray(local_cid)[probe_cids], -1)
+    tables = np.stack([np.where(own == o, local, -1).astype(np.int32)
+                       for o in range(n_owners)])
+    touches = (tables >= 0).any(axis=2).T                  # (Q, O)
+    return tables, touches

@@ -500,9 +500,13 @@ class EngineWorker:
         self.buf.append(idx)
 
     # -- dispatch / harvest ---------------------------------------------------
-    def _dispatch(self, q):
-        """Pad a flush up to the worker's own ladder — the engine is shared
-        state and is never reconfigured from here."""
+    def _dispatch(self, take):
+        """Pad a flush (``take``: query indices into the sink) up to the
+        worker's own ladder — the engine is shared state and is never
+        reconfigured from here. Subclasses (e.g. the sharded fleet's
+        ShardWorker) override this to attach per-query payloads such as
+        probe tables to the same flush."""
+        q = self.sink.q[take]
         nq = len(q)
         for b in self.buckets:
             if b >= nq:
@@ -554,7 +558,7 @@ class EngineWorker:
             return False                    # backpressure: refuse, don't stall
         take = self.buf[:self.max_bucket]
         del self.buf[:len(take)]
-        res, _ = self._dispatch(self.sink.q[take])   # async device dispatch
+        res, _ = self._dispatch(take)                # async device dispatch
         self.inflight.append((np.asarray(take), res, t))
         self.max_in_flight = max(self.max_in_flight, len(self.inflight))
         self.flush_sizes.append(len(take))

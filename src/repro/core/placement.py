@@ -29,6 +29,7 @@ class Placement:
     n_shards: int
     per_shard: int             # clusters per shard (padded equal)
     load: np.ndarray           # (S,) final per-shard load estimate
+    mem: np.ndarray | None = None  # (S,) final per-shard compact-index bytes
 
     def permute(self, arr: np.ndarray) -> np.ndarray:
         """Reorder a (C, ...) cluster-stacked array into shard-major order."""
@@ -36,12 +37,19 @@ class Placement:
 
 
 def greedy_place(freq: np.ndarray, bytes_per_cluster: np.ndarray,
-                 n_shards: int, mem_budget: int | None = None) -> Placement:
+                 n_shards: int, mem_budget: int | None = None,
+                 strict: bool = False) -> Placement:
     """LPT-style greedy: clusters in decreasing (freq-weighted) load order,
     each to the least-loaded shard with both load- and memory-headroom.
 
     freq: (C,) estimated/profiled access frequency (queries hitting the
     cluster); bytes_per_cluster: (C,) compact-index bytes.
+
+    mem_budget caps per-shard bytes. By default it is a soft constraint
+    (fall back to the least-loaded open shard if no shard has headroom);
+    with ``strict=True`` an infeasible cluster raises instead — the fleet
+    tier uses this so a partitioned deployment never silently overflows a
+    node's PIM capacity.
     """
     c = len(freq)
     assert c % n_shards == 0, (
@@ -54,14 +62,17 @@ def greedy_place(freq: np.ndarray, bytes_per_cluster: np.ndarray,
 
     order_desc = np.argsort(-(freq.astype(np.float64) + 1e-9))
     for cid in order_desc:
-        # shards still having a slot, sorted by load; memory budget as a
-        # soft constraint (fall back to least-loaded if all would exceed)
         open_mask = count < per_shard
         cand = np.nonzero(open_mask)[0]
         if mem_budget is not None:
             fits = cand[mem[cand] + bytes_per_cluster[cid] <= mem_budget]
             if len(fits):
                 cand = fits
+            elif strict:
+                raise ValueError(
+                    f"cluster {cid} ({bytes_per_cluster[cid]:.0f} B) fits no "
+                    f"shard within mem_budget={mem_budget} "
+                    f"(open shards already hold {mem[cand]} bytes)")
         s = cand[np.argmin(load[cand])]
         shard_of[cid] = s
         load[s] += freq[cid]
@@ -76,4 +87,4 @@ def greedy_place(freq: np.ndarray, bytes_per_cluster: np.ndarray,
         local_slot[members] = np.arange(per_shard)
     return Placement(order=order.astype(np.int32), shard_of=shard_of,
                      local_slot=local_slot, n_shards=n_shards,
-                     per_shard=per_shard, load=load)
+                     per_shard=per_shard, load=load, mem=mem)

@@ -20,6 +20,13 @@ the FleetScheduler (core/fleet.py): round-robin / least-in-flight
 routing, bounded admission queue, credit backpressure, and optional
 deadline load shedding — the multi-engine serving tier in its
 production position.
+
+--fleet N --sharded PARTITIONS the index instead of replicating it:
+partition_engine splits the clusters across N engines (disjoint slices,
+~1/N memory each) and the ShardedFleet scatters each decode-step query
+to the <= nprobe engines owning its probed clusters, gathering and
+merging partial top-k on the origin — the paper's Fig 18 multi-node
+serving shape under the RAG loop.
 """
 
 from __future__ import annotations
@@ -34,7 +41,7 @@ import numpy as np
 
 from ..configs import get_smoke
 from ..core import compact_index, engine
-from ..core.fleet import FleetScheduler, replicate_engine
+from ..core.fleet import FleetScheduler, partition_engine, replicate_engine
 from ..core.pipeline import StreamingScheduler, bucket_ladder
 from ..data.synthetic import clustered_vectors
 from ..models.model import build_model
@@ -94,7 +101,8 @@ ENCODERS: dict[str, Callable[..., QueryEncoder]] = {
 
 def run(arch: str, requests: int, prompt_len: int, gen: int,
         rag: bool = False, seed: int = 0, verbose: bool = True,
-        query_encoder: QueryEncoder | str | None = None, fleet: int = 1):
+        query_encoder: QueryEncoder | str | None = None, fleet: int = 1,
+        sharded: bool = False):
     cfg = get_smoke(arch)
     model = build_model(cfg)
     key = jax.random.PRNGKey(seed)
@@ -107,7 +115,14 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
                                          knn_k=16)
         scfg = engine.SearchConfig(nprobe=2, ef=16, k=4)
         eng = engine.PIMCQGEngine.build(key, x, icfg, scfg, n_shards=2)
-        if fleet > 1:
+        if fleet > 1 and sharded:
+            # partitioned tier: each of `fleet` engines owns a disjoint
+            # cluster slice; queries scatter to the owners of their probed
+            # clusters and partial top-k gathers on the origin
+            scheduler = partition_engine(
+                eng, fleet, buckets=bucket_ladder(max(requests, 1)),
+                fill_threshold=max(requests // 2, 1), wait_limit_s=5e-3)
+        elif fleet > 1:
             # multi-engine tier: shard the decode-step query stream across
             # `fleet` replicas behind admission control (core/fleet.py)
             scheduler = FleetScheduler(
@@ -156,7 +171,17 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
         if retrieved is not None:
             print(f"[serve] rag: retrieved neighbor ids (first 4 reqs): "
                   f"{retrieved[:4, :4].tolist()}")
-            if fleet > 1:
+            if fleet > 1 and sharded:
+                shares = [d["queries"] for d in rag_report.per_engine]
+                sizes = [d["clusters"] for d in rag_report.per_engine]
+                print(f"[serve] rag: sharded fleet={fleet} "
+                      f"clusters/engine={sizes} "
+                      f"fanout={rag_report.fanout_mean:.2f} "
+                      f"scatter flushes={rag_report.n_flushes} "
+                      f"merges={rag_report.n_merges} "
+                      f"per-engine queries={shares} "
+                      f"p50={rag_report.p50_ms:.1f}ms")
+            elif fleet > 1:
                 shares = [d["queries"] for d in rag_report.per_engine]
                 print(f"[serve] rag: fleet={fleet} ({rag_report.route}) "
                       f"buckets={scheduler.buckets} "
@@ -186,9 +211,13 @@ def main():
                     help="shard --rag retrieval across N engine replicas "
                          "via the FleetScheduler (default 1: single-engine "
                          "StreamingScheduler)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="with --fleet N: PARTITION the index across the N "
+                         "engines (disjoint cluster slices, scatter/gather "
+                         "routing) instead of replicating it")
     args = ap.parse_args()
     run(args.arch, args.requests, args.prompt_len, args.gen, args.rag,
-        query_encoder=args.encoder, fleet=args.fleet)
+        query_encoder=args.encoder, fleet=args.fleet, sharded=args.sharded)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,328 @@
+"""Sharded fleet tier (ISSUE 4 tentpole): partitioned-index scatter/gather.
+
+Pins the two contracts the tier is built on:
+
+  * PARITY — ``search_probed`` over the cluster_filter probes is
+    bit-identical to ``search``, and a ShardedFleet's merged results are
+    bit-identical to a single engine searching the same probed clusters
+    (clusters partition the corpus; exact distances are recomputed at the
+    origin merge through the same sort-based rerank path).
+
+  * PLACEMENT — ``partition_engine`` slices are disjoint and cover all
+    clusters, and ``greedy_place`` never exceeds a feasible per-shard
+    mem_budget (property-style: hypothesis when installed, a seeded grid
+    otherwise, matching the tier-1 hypothesis-optional pattern).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import compact_index, engine, ivf, placement
+from repro.core.fleet import ShardedFleet, ShardedReport, partition_engine
+from repro.data.synthetic import clustered_vectors, query_set
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def eng_q():
+    x, _ = clustered_vectors(3, 2000, 32, 8)
+    q = query_set(3, x, 37)
+    icfg = compact_index.IndexConfig(dim=32, n_clusters=8, degree=8, knn_k=16)
+    scfg = engine.SearchConfig(nprobe=2, ef=16, k=5)
+    eng = engine.PIMCQGEngine.build(jax.random.PRNGKey(0), x, icfg, scfg,
+                                    n_shards=2)
+    return eng, q
+
+
+# ---------------------------------------------------------------------------
+# search_probed: the partial-search entry point
+# ---------------------------------------------------------------------------
+
+def test_search_probed_matches_search(eng_q):
+    """Feeding cluster_filter's own probes back through search_probed must
+    reproduce search() bit-identically — same lanes, same rerank."""
+    eng, q = eng_q
+    sync, _ = eng.search(q)
+    probe, _ = ivf.cluster_filter(jnp.asarray(q), eng.index.centroids,
+                                  nprobe=eng.scfg.nprobe)
+    probed, _ = eng.search_probed(q, probe)
+    np.testing.assert_array_equal(np.asarray(probed.ids),
+                                  np.asarray(sync.ids))
+    np.testing.assert_array_equal(np.asarray(probed.dists),
+                                  np.asarray(sync.dists))
+
+
+def test_search_probed_padded_matches_unpadded(eng_q):
+    eng, q = eng_q
+    probe, _ = ivf.cluster_filter(jnp.asarray(q), eng.index.centroids,
+                                  nprobe=eng.scfg.nprobe)
+    ref, _ = eng.search_probed(q[:10], probe[:10])
+    pad, _ = eng.search_probed(q[:10], probe[:10], pad_to=16)
+    np.testing.assert_array_equal(np.asarray(pad.ids), np.asarray(ref.ids))
+    np.testing.assert_array_equal(np.asarray(pad.dists),
+                                  np.asarray(ref.dists))
+
+
+def test_search_probed_holes_restrict_candidates(eng_q):
+    """-1 probe entries are holes: with only the top-1 probe kept, every
+    returned id must live in that cluster (the engine searched nothing
+    else), and an all-hole row returns the -1/inf sentinels."""
+    eng, q = eng_q
+    probe, _ = ivf.cluster_filter(jnp.asarray(q), eng.index.centroids,
+                                  nprobe=eng.scfg.nprobe)
+    probe = np.asarray(probe).copy()
+    probe[:, 1:] = -1
+    res, _ = eng.search_probed(q, probe)
+    ids = np.asarray(res.ids)
+    node_ids = np.asarray(eng.index.node_ids)
+    for i in range(len(q)):
+        members = set(node_ids[probe[i, 0]].tolist()) - {-1}
+        got = set(ids[i].tolist()) - {-1}
+        assert got and got <= members
+    hole_row = np.full((1, probe.shape[1]), -1, np.int32)
+    res0, _ = eng.search_probed(q[:1], hole_row)
+    assert (np.asarray(res0.ids) == -1).all()
+    assert np.isinf(np.asarray(res0.dists)).all()
+
+
+def test_search_probed_validates_shapes(eng_q):
+    eng, q = eng_q
+    with pytest.raises(ValueError, match="probe rows"):
+        eng.search_probed(q, np.zeros((3, 2), np.int32))
+    with pytest.raises(ValueError, match="pad_to"):
+        eng.search_probed(q, np.zeros((len(q), 2), np.int32), pad_to=4)
+    # global-vs-local cid confusion must raise, not silently clamp
+    bad = np.full((len(q), 2), eng.index.n_clusters, np.int32)
+    with pytest.raises(ValueError, match="LOCAL cluster ids"):
+        eng.search_probed(q, bad)
+
+
+# ---------------------------------------------------------------------------
+# sharded fleet: scatter/gather parity with a single engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("parts", [2, 4])
+def test_sharded_fleet_bit_identical_to_single_engine(eng_q, parts):
+    eng, q = eng_q
+    sync, _ = eng.search(q)
+    fleet = partition_engine(eng, parts, buckets=(8, 16), fill_threshold=16,
+                             wait_limit_s=1e-3, fifo_depth=2)
+    rep = fleet.run(q)
+    assert isinstance(rep, ShardedReport)
+    np.testing.assert_array_equal(rep.ids, np.asarray(sync.ids))
+    np.testing.assert_allclose(rep.dists, np.asarray(sync.dists),
+                               rtol=1e-5, atol=1e-4)
+    assert rep.n_unrouted == 0
+    assert np.isfinite(rep.latency_s).all()
+    # scatter really fanned out: >1 shard worked, fanout within [1, nprobe]
+    assert sum(1 for d in rep.per_engine if d["queries"] > 0) >= 2
+    assert 1.0 <= rep.fanout_mean <= eng.scfg.nprobe
+    # the index is partitioned, not replicated
+    assert [d["clusters"] for d in rep.per_engine] == [8 // parts] * parts
+
+
+def test_sharded_fleet_poisson_stream(eng_q):
+    eng, q = eng_q
+    sync, _ = eng.search(q)
+    rng = np.random.default_rng(2)
+    arr = np.cumsum(rng.exponential(3e-4, len(q)))
+    fleet = partition_engine(eng, 2, buckets=(4, 8, 16), fill_threshold=16,
+                             wait_limit_s=1e-3, fifo_depth=3)
+    rep = fleet.run(q, arr)
+    np.testing.assert_array_equal(rep.ids, np.asarray(sync.ids))
+    assert rep.n_merges >= 2
+    assert (rep.latency_s >= 0).all()
+    assert rep.p99_ms >= rep.p50_ms
+    assert sum(rep.merge_sizes) == len(q)
+
+
+# ---------------------------------------------------------------------------
+# partitioning + memory budget
+# ---------------------------------------------------------------------------
+
+def test_partition_is_disjoint_and_covering(eng_q):
+    eng, _ = eng_q
+    fleet = partition_engine(eng, 4)
+    seen = []
+    for e in fleet.engines:
+        seen.extend(np.asarray(e.index.node_ids).ravel().tolist())
+    seen = [s for s in seen if s >= 0]
+    assert len(seen) == len(set(seen))               # disjoint slices
+    full = np.asarray(eng.index.node_ids).ravel()
+    assert set(seen) == set(full[full >= 0].tolist())   # covering
+    # owner map consistent with the slices
+    for o, e in enumerate(fleet.engines):
+        assert (fleet.part_of == o).sum() == e.index.n_clusters
+
+
+def test_partition_engine_respects_strict_mem_budget(eng_q):
+    eng, _ = eng_q
+    sizes = np.asarray(eng.index.n_valid)
+    bpc = sizes * compact_index.compact_bytes_per_node(eng.icfg.dim,
+                                                       eng.icfg.degree)
+    # feasible budget: every shard can absorb its per_shard share
+    budget = int(bpc.max()) * (len(bpc) // 2)
+    fleet = partition_engine(eng, 2, mem_budget=budget, strict=True)
+    for o in range(2):
+        assert bpc[fleet.part_of == o].sum() <= budget
+    with pytest.raises(ValueError, match="mem_budget"):
+        partition_engine(eng, 2, mem_budget=int(bpc.max()) - 1, strict=True)
+
+
+def _check_greedy_place_within_budget(freq, bpc, n_shards):
+    """With budget >= per_shard * max(bpc) any placement is feasible, so
+    the greedy must come in under budget on every shard (and report mem)."""
+    per_shard = len(bpc) // n_shards
+    budget = float(np.max(bpc)) * per_shard
+    pl = placement.greedy_place(freq, bpc, n_shards, mem_budget=budget,
+                                strict=True)
+    assert pl.mem is not None and (pl.mem <= budget + 1e-9).all()
+    # mem accounting is real: recompute from the assignment
+    for s in range(n_shards):
+        np.testing.assert_allclose(pl.mem[s], bpc[pl.shard_of == s].sum())
+
+
+_GRID = [(seed, c, s) for seed in (0, 1, 2, 3) for c, s in
+         [(8, 2), (12, 4), (16, 2), (24, 8)]]
+
+
+@pytest.mark.parametrize("seed,c,s", _GRID)
+def test_greedy_place_respects_mem_budget(seed, c, s):
+    rng = np.random.default_rng(seed)
+    freq = rng.uniform(0.0, 10.0, c)
+    bpc = rng.uniform(1.0, 1000.0, c)
+    _check_greedy_place_within_budget(freq, bpc, s)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           cs=st.sampled_from([(8, 2), (12, 4), (16, 2), (24, 8)]))
+    def test_greedy_place_respects_mem_budget_hypothesis(seed, cs):
+        rng = np.random.default_rng(seed)
+        c, s = cs
+        freq = rng.uniform(0.0, 10.0, c)
+        bpc = rng.uniform(1.0, 1000.0, c)
+        _check_greedy_place_within_budget(freq, bpc, s)
+
+
+def test_greedy_place_strict_raises_when_infeasible():
+    bpc = np.array([100.0, 100.0, 100.0, 5000.0])
+    freq = np.ones(4)
+    with pytest.raises(ValueError, match="mem_budget"):
+        placement.greedy_place(freq, bpc, 2, mem_budget=400, strict=True)
+    # soft mode still places everything (documented overflow fallback)
+    pl = placement.greedy_place(freq, bpc, 2, mem_budget=400)
+    assert (pl.shard_of >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# heterogeneity-aware routing
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def het_fleet(eng_q):
+    eng, _ = eng_q
+    return eng, partition_engine(eng, 2, modes=["mulfree", "exact"],
+                                 buckets=(8, 16, 64), fill_threshold=64,
+                                 wait_limit_s=1e-3)
+
+
+def test_heterogeneous_fleet_routes_by_backend(het_fleet, eng_q):
+    """A query requesting a backend reaches ONLY shards declaring it; the
+    returned ids all live in clusters owned by matching shards."""
+    eng, fleet = het_fleet
+    _, q = eng_q
+    rep = fleet.run(q, backend="exact")
+    assert rep.backends == ["mulfree", "exact"]
+    assert rep.per_engine[0]["queries"] == 0         # mulfree shard idle
+    exact_nodes = set(
+        np.asarray(fleet.engines[1].index.node_ids).ravel().tolist()) - {-1}
+    got = set(rep.ids[rep.ids >= 0].ravel().tolist())
+    assert got and got <= exact_nodes
+
+
+def test_heterogeneous_fleet_per_query_backends(het_fleet, eng_q):
+    """Mixed per-query requests: None rows are unrestricted (scatter to
+    every owning shard, each answering with ITS backend), "exact" rows only
+    ever touch exact-shard clusters."""
+    eng, fleet = het_fleet
+    _, q = eng_q
+    reqs = [None if i % 2 else "exact" for i in range(len(q))]
+    rep = fleet.run(q, backend=reqs)
+    none_rows = np.asarray([r is None for r in reqs])
+    assert (rep.ids[none_rows] >= 0).any(axis=1).all()
+    exact_nodes = set(
+        np.asarray(fleet.engines[1].index.node_ids).ravel().tolist()) - {-1}
+    restricted = rep.ids[~none_rows]
+    got = set(restricted[restricted >= 0].ravel().tolist())
+    assert got and got <= exact_nodes
+    # unrestricted rows saw a fanout the restricted rows could not
+    assert rep.fanout_mean <= eng.scfg.nprobe
+
+
+def test_heterogeneous_fleet_unknown_backend_raises(het_fleet, eng_q):
+    _, fleet = het_fleet
+    _, q = eng_q
+    with pytest.raises(ValueError, match="no shard serves"):
+        fleet.run(q, backend="nope")
+    with pytest.raises(ValueError, match="backend list length"):
+        fleet.run(q, backend=["exact"])
+
+
+def test_unrouted_query_completes_with_sentinels():
+    """nprobe=1 + a backend filter that removes the probed cluster's owner:
+    the query completes unrouted (ids -1, dists inf, finite latency)."""
+    x, _ = clustered_vectors(5, 1200, 32, 8)
+    q = query_set(5, x, 16)
+    icfg = compact_index.IndexConfig(dim=32, n_clusters=8, degree=8, knn_k=16)
+    scfg = engine.SearchConfig(nprobe=1, ef=16, k=4)
+    eng = engine.PIMCQGEngine.build(jax.random.PRNGKey(1), x, icfg, scfg,
+                                    n_shards=1)
+    fleet = partition_engine(eng, 2, modes=["mulfree", "exact"],
+                             buckets=(16,), fill_threshold=16,
+                             wait_limit_s=1e-3)
+    probe = np.asarray(ivf.cluster_filter(jnp.asarray(q), eng.index.centroids,
+                                          nprobe=1)[0])[:, 0]
+    owner = fleet.part_of[probe]
+    rep = fleet.run(q, backend="exact")
+    unrouted = owner == 0                            # mulfree-owned probes
+    assert rep.n_unrouted == int(unrouted.sum())
+    if unrouted.any():
+        assert (rep.ids[unrouted] == -1).all()
+        assert np.isinf(rep.dists[unrouted]).all()
+        assert np.isfinite(rep.latency_s[unrouted]).all()
+    if (~unrouted).any():
+        assert (rep.ids[~unrouted] >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# construction validation
+# ---------------------------------------------------------------------------
+
+def test_partition_engine_validation(eng_q):
+    eng, _ = eng_q
+    with pytest.raises(ValueError, match="at least one partition"):
+        partition_engine(eng, 0)
+    with pytest.raises(ValueError, match="modes"):
+        partition_engine(eng, 2, modes=["mulfree"])
+
+
+def test_sharded_fleet_constructor_validation(eng_q):
+    eng, _ = eng_q
+    fleet = partition_engine(eng, 2)
+    with pytest.raises(ValueError, match="at least one engine"):
+        ShardedFleet([], fleet.part_of, fleet.local_cid, fleet.centroids)
+    with pytest.raises(ValueError, match="cluster count"):
+        ShardedFleet(fleet.engines, fleet.part_of[:4], fleet.local_cid,
+                     fleet.centroids)
+    with pytest.raises(ValueError, match="assigns"):
+        ShardedFleet(fleet.engines, np.zeros_like(fleet.part_of),
+                     fleet.local_cid, fleet.centroids)
