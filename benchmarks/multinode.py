@@ -21,7 +21,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import engine
-from repro.core.fleet import partition_engine
+from repro.core.fleet import partition_engine, topology
 from .common import (SMOKE, build_engine, check, fmt_row, make_workload,
                      timed_qps)
 
@@ -94,6 +94,31 @@ def run(verbose: bool = True) -> list[str]:
         check(0 < rep.fanout_mean <= min(scfg.nprobe, nodes),
               f"fanout {rep.fanout_mean} outside (0, "
               f"{min(scfg.nprobe, nodes)}]")
+
+    # -- measured: the hybrid point (ISSUE 5) -------------------------------
+    # 4 engines arranged as 2 shards x 2 replicas: partition for capacity,
+    # replicate each partition for throughput. Parity must still hold, the
+    # scatter fanout is bounded by the SHARD count (not the engine count),
+    # and both replicas of every shard genuinely share its load.
+    topo = topology(eng, shards=2, replicas=2, buckets=(len(w.q),),
+                    fill_threshold=len(w.q), wait_limit_s=5e-3)
+    topo.run(w.q)                                  # warm the executables
+    rep = topo.run(w.q)
+    check((rep.ids == sync_ids).all(),
+          "hybrid 2x2 topology ids diverge from single engine")
+    check(0 < rep.fanout_mean <= min(scfg.nprobe, 2),
+          f"hybrid fanout {rep.fanout_mean} outside (0, "
+          f"{min(scfg.nprobe, 2)}] — bounded by shards, not engines")
+    shares = [d["queries"] for d in rep.per_engine]
+    for o in range(2):
+        reps = [d["queries"] for d in rep.per_engine if d["shard"] == o]
+        check(min(reps) > 0,
+              f"hybrid shard {o} left a replica idle: {reps}")
+    rows.append(fmt_row(
+        "fig18_hybrid2x2", 1e6 / max(rep.qps, 1e-9),
+        f"qps={rep.qps:.0f} fanout={rep.fanout_mean:.2f} "
+        f"scatter_flushes={rep.n_flushes} merges={rep.n_merges} "
+        f"per_engine_q={shares} ids_match_single=1.000"))
 
     # -- analytic overlay: the multi-node throughput prediction -------------
     q_bytes = w.icfg.dim * 4

@@ -1,16 +1,25 @@
-"""Overload benchmark — the fleet tier under 0.5x..8x offered load.
+"""Overload benchmark — the serving tiers under 0.5x..8x offered load.
 
-Sweeps a Poisson stream through a FleetScheduler (N engine replicas,
-bounded admission queue, credit backpressure, deadline shedding) at
-multiples of the host's measured service capacity. The claim (ISSUE 3):
-overload degrades to a goodput plateau with BOUNDED tail latency and a
-reported shed fraction, instead of queueing latency collapse — p99 at 4x
-offered load stays within 3x of the 1x p99, and every admitted query's
-ids are bit-identical to an unpadded single-engine search.
+Sweeps a Poisson stream through the three serving topologies (ISSUE 5:
+replicated, sharded, and the hybrid shards x replicas — all behind the
+SAME tier-wide admission controller) at multiples of the host's measured
+service capacity. The claims:
 
-A calibrated ``EventSimulator.dynamic(..., shed_deadline_s=...)`` run at
-the same multipliers is printed alongside: the simulator predicts the
-same goodput plateau the real fleet measures.
+  * Overload degrades to a goodput plateau with BOUNDED tail latency and
+    a reported shed fraction on EVERY tier — p99 at 4x offered load stays
+    within 3x of that tier's 1x p99, and goodput at 8x holds the 4x
+    plateau instead of collapsing. Before the refactor the sharded tier
+    had NO shedding at all (ISSUE 5's motivating gap): a 4x burst just
+    grew its buffers without bound.
+
+  * Every admitted query's ids are bit-identical to an unpadded
+    single-engine search, on every tier and at every load point.
+
+  * A calibrated ``EventSimulator.dynamic(..., shed_deadline_s=...)`` run
+    predicts the measured goodput plateau, and the shed-aware client
+    retry model (``RetryPolicy``) shows bounded retries re-offering shed
+    queries keep goodput within a factor of the no-retry plateau instead
+    of melting it down (the retry-storm overlay).
 """
 
 from __future__ import annotations
@@ -20,14 +29,19 @@ import time
 import numpy as np
 
 from repro.core import engine
-from repro.core.fleet import FleetScheduler, replicate_engine
-from repro.core.pipeline import EventSimulator, StageCosts, UPMEM_LINK
+from repro.core.fleet import topology
+from repro.core.pipeline import (EventSimulator, RetryPolicy, StageCosts,
+                                 UPMEM_LINK)
 from .common import build_engine, check, fmt_row, make_workload, smoke_cap
 
 N_POOL = 64              # distinct queries, cycled to form long streams
 N_ENGINES = 2
 MAX_BATCH = 32
 MULTS = (0.5, 1.0, 2.0, 4.0, 8.0)
+TIER_MULTS = (1.0, 4.0, 8.0)   # sharded/hybrid: floor, tail, and plateau
+TIERS = (("replicated", dict(shards=1, replicas=N_ENGINES)),
+         ("sharded", dict(shards=N_ENGINES, replicas=1)),
+         ("hybrid", dict(shards=N_ENGINES, replicas=N_ENGINES)))
 STREAM_S = smoke_cap(1.0, 0.3)    # offered duration per load point
 MAX_STREAM_QUERIES = smoke_cap(4096, 768)
 
@@ -37,11 +51,10 @@ def run(verbose: bool = True) -> list[str]:
     scfg = engine.SearchConfig(nprobe=4, ef=40, k=10)
     eng = build_engine(w, scfg)
     buckets = (MAX_BATCH // 4, MAX_BATCH)
-    for b in buckets:                              # warm the ladder
-        eng.search(w.q[:1], pad_to=b)
+    eng.warm(buckets)                              # warm the ladder
 
     # measured capacity of the host (single device: replicas add scheduling,
-    # not FLOPs, so the fleet's service capacity IS the device rate)
+    # not FLOPs, so every tier's service capacity IS the device rate)
     t0 = time.perf_counter()
     res, _ = eng.search(w.q[:MAX_BATCH], pad_to=MAX_BATCH)
     np.asarray(res.ids)
@@ -50,43 +63,69 @@ def run(verbose: bool = True) -> list[str]:
     # Knobs chosen so the p99 bound is STRUCTURAL, not queueing luck:
     # every query pays >= wait_limit + service ~= 2*t_batch at any load
     # (the 1x p99 floor), while an admitted query at any overload pays
-    # <= deadline + wait_limit + committed backlog (n_engines * fifo_depth
-    # flushes) ~= 4.5*t_batch — under the 3x acceptance bound by design.
+    # <= deadline + wait_limit + committed backlog (fifo_depth flushes per
+    # worker, plus the sharded tiers' merge wait) — under the 3x
+    # acceptance bound by design.
     wait_limit = max(2e-3, t_batch)
     deadline = max(0.02, 1.5 * t_batch)            # admission-wait budget
     fifo_depth = 1
 
-    # per-query expected ids: the stream cycles the pool, and padded
-    # bucketed search is bit-identical to this unpadded reference
+    # per-query expected ids: the stream cycles the pool, and both the
+    # padded bucketed search and the scatter/gather merge are bit-identical
+    # to this unpadded reference
     sync_ids = np.asarray(eng.search(w.q)[0].ids)
 
-    engines = replicate_engine(eng, N_ENGINES)
     rng = np.random.default_rng(0)
-    rows, p99_by_mult, fleet_good = [], {}, {}
-    for mult in MULTS:
-        offered = mult * capacity_qps
-        n = min(int(STREAM_S * offered), MAX_STREAM_QUERIES)
-        idx = np.arange(n) % N_POOL
-        q = w.q[idx]
-        arr = np.cumsum(rng.exponential(1.0 / offered, n))
-        fleet = FleetScheduler(engines, buckets=buckets,
-                               fill_threshold=MAX_BATCH,
-                               wait_limit_s=wait_limit, fifo_depth=fifo_depth,
-                               shed_deadline_s=deadline)
-        rep = fleet.run(q, arr)
-        adm = ~rep.shed
-        exact = float((rep.ids[adm] == sync_ids[idx[adm]]).all(axis=1).mean()) \
-            if adm.any() else 1.0
-        p99_by_mult[mult] = rep.p99_ms
-        fleet_good[mult] = rep.qps
+    rows, fleet_good = [], {}
+    for tier, shape in TIERS:
+        topo = topology(eng, **shape, buckets=buckets,
+                        fill_threshold=MAX_BATCH, wait_limit_s=wait_limit,
+                        fifo_depth=fifo_depth, shed_deadline_s=deadline)
+        topo.warm()            # every probed/merge executable, pre-stream
+        mults = MULTS if tier == "replicated" else TIER_MULTS
+        p99, goodput = {}, {}
+        for mult in mults:
+            offered = mult * capacity_qps
+            n = min(int(STREAM_S * offered), MAX_STREAM_QUERIES)
+            idx = np.arange(n) % N_POOL
+            q = w.q[idx]
+            arr = np.cumsum(rng.exponential(1.0 / offered, n))
+            rep = topo.run(q, arr)
+            adm = ~rep.shed
+            exact = float((rep.ids[adm] == sync_ids[idx[adm]])
+                          .all(axis=1).mean()) if adm.any() else 1.0
+            p99[mult] = rep.p99_ms
+            goodput[mult] = rep.qps
+            rows.append(fmt_row(
+                f"overload_{tier}_{mult}x", 1e6 / max(rep.qps, 1e-9),
+                f"offered={offered:.0f}qps goodput={rep.qps:.0f}qps "
+                f"shed={rep.shed_fraction:.2f} p50={rep.p50_ms:.1f}ms "
+                f"p99={rep.p99_ms:.1f}ms ids_match_sync={exact:.3f} "
+                f"flushes={rep.n_flushes} merges={rep.n_merges}"))
+            check(exact == 1.0,
+                  f"{tier}: admitted ids diverge from single-engine "
+                  f"search at {mult}x")
+        # bounded tail: the deadline, not the backlog, sets the 4x p99 —
+        # this is the claim the pre-refactor sharded tier could not make
+        bound = 3 * p99[1.0]
         rows.append(fmt_row(
-            f"overload_{mult}x", 1e6 / max(rep.qps, 1e-9),
-            f"offered={offered:.0f}qps goodput={rep.qps:.0f}qps "
-            f"shed={rep.shed_fraction:.2f} p50={rep.p50_ms:.1f}ms "
-            f"p99={rep.p99_ms:.1f}ms ids_match_sync={exact:.3f} "
-            f"flushes={rep.n_flushes}"))
-        check(exact == 1.0,
-              f"admitted ids diverge from single-engine search at {mult}x")
+            f"overload_p99_bound_{tier}", 0.0,
+            f"p99_4x={p99[4.0]:.1f}ms <= 3x_p99_1x={bound:.1f}ms "
+            f"(deadline={deadline * 1e3:.0f}ms)"))
+        check(p99[4.0] <= bound,
+              f"{tier}: p99 at 4x ({p99[4.0]:.1f}ms) exceeds 3x the 1x "
+              f"p99 ({bound:.1f}ms) — shedding failed to bound the tail")
+        # goodput plateau: pushing 8x instead of 4x must not collapse it
+        if 8.0 in goodput:
+            rows.append(fmt_row(
+                f"overload_plateau_{tier}", 0.0,
+                f"goodput_8x={goodput[8.0]:.0f}qps vs "
+                f"goodput_4x={goodput[4.0]:.0f}qps"))
+            check(goodput[8.0] >= 0.6 * goodput[4.0],
+                  f"{tier}: goodput collapses past the plateau "
+                  f"({goodput[8.0]:.0f} vs {goodput[4.0]:.0f} qps)")
+        if tier == "replicated":
+            fleet_good = dict(goodput)
 
     # calibrated simulator: same policy, same deadline, same multipliers —
     # the offline model should predict the measured goodput plateau
@@ -97,11 +136,13 @@ def run(verbose: bool = True) -> list[str]:
                        link=UPMEM_LINK, query_bytes=576, result_bytes=320)
     sim = EventSimulator(n_pus=N_ENGINES, costs=costs, rerank_workers=2,
                          fifo_depth=fifo_depth)
+    sim_args = {}
     for mult in MULTS:
         offered = mult * capacity_qps
         n = min(int(STREAM_S * offered), MAX_STREAM_QUERIES)
         arr = np.cumsum(rng.exponential(1.0 / offered, n))
         pus = np.arange(n) % N_ENGINES
+        sim_args[mult] = (arr, pus)
         r = sim.dynamic(arr, pus, threshold=MAX_BATCH,
                         wait_limit_s=wait_limit, shed_deadline_s=deadline)
         rows.append(fmt_row(
@@ -110,14 +151,29 @@ def run(verbose: bool = True) -> list[str]:
             f"shed={r.shed_fraction:.2f} "
             f"measured_goodput={fleet_good[mult]:.0f}qps"))
 
-    bound = 3 * p99_by_mult[1.0]
+    # retry-storm overlay (ISSUE 5 satellite): shed queries re-offered
+    # after backoff at the deepest overload point — bounded retries must
+    # ride the plateau, not melt it down
+    arr, pus = sim_args[8.0]
+    base = sim.dynamic(arr, pus, threshold=MAX_BATCH,
+                       wait_limit_s=wait_limit, shed_deadline_s=deadline)
+    retry = RetryPolicy(max_attempts=3, backoff_s=2 * deadline)
+    rt = sim.dynamic(arr, pus, threshold=MAX_BATCH, wait_limit_s=wait_limit,
+                     shed_deadline_s=deadline, retry=retry)
     rows.append(fmt_row(
-        "overload_p99_bound", 0.0,
-        f"p99_4x={p99_by_mult[4.0]:.1f}ms <= 3x_p99_1x={bound:.1f}ms "
-        f"(deadline={deadline * 1e3:.0f}ms)"))
-    check(p99_by_mult[4.0] <= bound,
-          f"p99 at 4x ({p99_by_mult[4.0]:.1f}ms) exceeds 3x the 1x p99 "
-          f"({bound:.1f}ms) — shedding failed to bound the tail")
+        "overload_retry_storm", 0.0,
+        f"goodput_retry={rt.qps:.0f}qps vs plateau={base.qps:.0f}qps "
+        f"retries={rt.n_retries} shed_retry={rt.shed_fraction:.2f} "
+        f"shed_base={base.shed_fraction:.2f} "
+        f"lat_retry={rt.mean_latency_s * 1e3:.1f}ms "
+        f"lat_base={base.mean_latency_s * 1e3:.1f}ms"))
+    check(rt.n_retries > 0, "8x overload produced no retries to model")
+    check(rt.qps >= base.qps / 1.5,
+          f"goodput with bounded retries ({rt.qps:.0f}qps) fell more than "
+          f"1.5x below the no-retry plateau ({base.qps:.0f}qps) — a "
+          f"retry storm")
+    check(rt.shed_fraction <= base.shed_fraction,
+          "retries must rescue shed queries, not add net shed")
     if verbose:
         for r in rows:
             print(r)

@@ -20,11 +20,12 @@ Modules:
     overfetch       Fig 15     EF sweep vs SymphonyQG-mode baseline
     scheduling      Fig 16     policy comparison (calibrated simulator)
     streaming       §IV-B      bucketed streaming scheduler vs per-shape
-    overload        ISSUE 3    fleet tier under 0.5x..8x offered load
+    overload        ISSUE 3/5  serving tiers (replicated/sharded/hybrid)
+                               under 0.5x..8x offered load + retry storm
     breakdown       Fig 14     five-stage pipeline breakdown
     mulfree_bench   Fig 17/9   shift-add kernel time + recall delta
     pim_baselines   Fig 13     IVF-PQ recall ceiling vs PIMCQG
-    multinode       Fig 18     sharded-fleet scatter/gather + IB model
+    multinode       Fig 18     sharded + hybrid scatter/gather + IB model
     pim_arch        Fig 19     PIM-HBM / AiM projection
     roofline_table  Fig 1 + §Roofline table from dry-run artifacts
 """

@@ -420,6 +420,18 @@ class PIMCQGEngine:
         """Number of distinct search executables built (one per shape)."""
         return len(self._search_cache)
 
+    def warm(self, buckets: tuple[int, ...] | None = None) -> int:
+        """Pre-compile the search executable for each bucket size (the
+        engine's own ladder by default) so a timed stream measures serving,
+        not tracing. Returns the number of executables built."""
+        buckets = buckets if buckets is not None else self.buckets
+        before = self.compile_count
+        dummy = np.zeros((1, self.icfg.dim), np.float32)
+        for b in buckets:
+            res, _ = self.search(dummy, pad_to=int(b))
+            np.asarray(res.ids)
+        return self.compile_count - before
+
     # -- reporting ----------------------------------------------------------
     def footprint(self) -> dict:
         n = int(np.asarray(self.index.n_valid).sum())

@@ -1,96 +1,53 @@
-"""Multi-engine fleet serving tier (paper §IV-B scaled out, ROADMAP's
-"multi-host scheduler + admission control / load shedding" step).
+"""Fleet serving facades over the composable ``core.topology`` tier.
 
-``FleetScheduler`` shards one query stream across N engine replicas, each
-driven by its own ``EngineWorker`` (core/pipeline.py — the per-engine
-flush/harvest loop StreamingScheduler runs exactly one of). The fleet adds
-the three overload mechanisms UpANNS/DRIM-ANN-style multi-node serving
-needs on the host tier:
+Historically this module grew two parallel classes: ``FleetScheduler``
+(engine replicas behind admission control / backpressure / deadline
+shedding) and ``ShardedFleet`` (index partitions with scatter/gather and
+NONE of the overload machinery). ISSUE 5 refactored both into one
+``core.topology.ServingTopology`` — an ``AdmissionController`` fronting a
+tree of tier nodes (replica groups deal, shard groups scatter/gather) —
+so any topology, including the hybrid ``topology(shards=N, replicas=R)``,
+gets shedding, backpressure, and heterogeneous backend routing uniformly.
 
-  * **routing** — arrivals are dealt to workers in flush-sized chunks,
-    either ``round-robin`` (deterministic dealing) or ``least-in-flight``
-    (join-the-shortest-queue over device FIFO depth, the DRIM-ANN-style
-    load balance across unevenly-loaded compute units).
+What remains here are the two public facades (APIs and bit-parity
+contracts unchanged — tests/test_fleet.py and tests/test_sharded.py run
+unmodified against them) plus their reports and builders:
 
-  * **admission control / backpressure** — a bounded global admission
-    queue in front of the workers; a worker only accepts queries while it
-    has credits (free in-flight FIFO slots x max bucket). At zero credits
-    everywhere, queries wait in the admission queue instead of stalling
-    the host thread on one engine; a full admission queue sheds new
-    arrivals immediately.
+  * ``FleetScheduler`` / ``replicate_engine`` — N replicas of one index
+    copy; arrivals dealt round-robin / least-in-flight behind a bounded
+    admission queue with credit backpressure and deadline shedding.
+    Admitted results are bit-identical to an unpadded single-engine
+    search of the same stream.
 
-  * **deadline load shedding** — a query still undispatched
-    ``shed_deadline_s`` after arrival is dropped (ids -1, latency NaN,
-    counted in ``shed_fraction``). Every query that IS dispatched started
-    within its deadline, so overload degrades to a goodput plateau with
-    bounded p99 instead of unbounded queueing latency collapse.
-    ``EventSimulator.dynamic(..., shed_deadline_s=...)`` models the same
-    policy offline; benchmarks/overload.py overlays the two.
-
-Admitted queries flow through the exact same padded/bucketed
-``engine.search(pad_to=...)`` path as a single engine, into one shared
-``StreamSink`` — their results are bit-identical to an unpadded
-single-engine search of the same stream.
-
-``ShardedFleet`` is the second tier (paper Fig 18's multi-node story,
-UpANNS/DRIM-ANN cluster sharding): instead of replicating the whole index
-per engine, ``partition_engine`` PARTITIONS the clusters across N engines
-with ``placement.greedy_place`` (each engine's PlacedIndex holds only its
-disjoint cluster slice, optionally under a strict per-engine memory
-budget). The origin host runs the IVF top-probe selection once, SCATTERS
-each query only to the <= nprobe engines owning its probed clusters
-(``ivf.split_probes_by_owner``), each engine answers with a partial top-k
-over exactly those clusters (``engine.search_probed``), and the origin
-GATHERS the partials and merges them through the existing sort-based
-rerank path — bit-identical to a single engine searching the same probed
-clusters. Routing is heterogeneity-aware: every shard declares its
-ranking backend (``scfg.mode``), and a query may request a backend, in
-which case only matching shards' clusters are searched.
+  * ``ShardedFleet`` / ``partition_engine`` — the clusters PARTITIONED
+    across N engines (disjoint ``CompactIndex`` slices via
+    ``placement.greedy_place``); the origin runs IVF top-probe selection
+    once, scatters each query to the <= nprobe owning engines
+    (``ivf.split_probes_by_owner`` -> ``engine.search_probed``), and
+    merges gathered partial top-k through the sort-based rerank path —
+    bit-identical to a single engine searching the same probed clusters.
+    Heterogeneity-aware: shards declare ``scfg.mode`` and queries may
+    request a backend. The facade keeps the legacy eager-scatter
+    semantics (no admission control); build the same shape through
+    ``core.topology.topology(shards=N, shed_deadline_s=...)`` to get the
+    overload machinery.
 """
 
 from __future__ import annotations
 
-import copy
 import dataclasses
-import math
-import time
-from collections import deque
 
-import jax.numpy as jnp
 import numpy as np
 
-from . import compact_index as compact_index_mod
-from . import engine as engine_mod
-from . import ivf as ivf_mod
-from . import placement as placement_mod
-from . import rerank as rerank_mod
-from .pipeline import (EngineWorker, StageCosts, StreamSink, percentile_ms,
-                       resolve_stream_params)
+from .pipeline import StageCosts
+from .topology import (AdmissionController, ReplicaGroup, ServingTopology,
+                       ShardGroup, ShardWorker, ShardedSink, TopologyReport,
+                       partition_index, replicate_engine, topology)
 
 __all__ = ["FleetScheduler", "FleetReport", "replicate_engine",
-           "ShardedFleet", "ShardedReport", "partition_engine"]
+           "ShardedFleet", "ShardedReport", "partition_engine", "topology"]
 
 ROUTE_POLICIES = ("round-robin", "least-in-flight")
-
-
-def replicate_engine(eng, n: int, *, share_executables: bool = True) -> list:
-    """N logical replicas of one built PIMCQGEngine for a single-host fleet.
-
-    Replicas share the placed index arrays (one device copy — they model N
-    schedulable engines, not N copies of the corpus). With
-    ``share_executables`` (default) they also share the compiled-search
-    cache, so the fleet warms ``len(buckets)`` executables total instead of
-    per replica; pass False to give each replica its own cache (what
-    distinct hosts would have)."""
-    if n < 1:
-        raise ValueError(f"need at least one replica, got {n}")
-    out = [eng]
-    for _ in range(n - 1):
-        rep = copy.copy(eng)
-        if not share_executables:
-            rep._search_cache = {}
-        out.append(rep)
-    return out
 
 
 @dataclasses.dataclass
@@ -121,9 +78,10 @@ class FleetReport:
 
 class FleetScheduler:
     """Shard one query stream across N engine replicas with admission
-    control. Single-engine semantics (bucket ladder, fill/deadline flush,
+    control — a facade over ``ServingTopology`` with a single replica
+    group. Single-engine semantics (bucket ladder, fill/deadline flush,
     bounded in-flight FIFO) are per-worker and identical to
-    StreamingScheduler; the fleet owns routing, the bounded admission
+    StreamingScheduler; the topology owns routing, the bounded admission
     queue, and the shed policy."""
 
     def __init__(self, engines, *, route: str = "least-in-flight",
@@ -134,162 +92,37 @@ class FleetScheduler:
                  shed_deadline_s: float | None = None):
         if not engines:
             raise ValueError("FleetScheduler needs at least one engine")
-        if route not in ROUTE_POLICIES:
-            raise ValueError(f"route must be one of {ROUTE_POLICIES}, "
-                             f"got {route!r}")
-        ks = {e.scfg.k for e in engines}
-        if len(ks) != 1:
-            raise ValueError(f"engines disagree on k: {sorted(ks)}")
+        self._topo = ServingTopology(
+            [list(engines)], route=route, buckets=buckets, costs=costs,
+            fill_threshold=fill_threshold, wait_limit_s=wait_limit_s,
+            fifo_depth=fifo_depth, max_batch=max_batch,
+            admission_depth="auto" if admission_depth is None
+            else admission_depth,
+            shed_deadline_s=shed_deadline_s)
         self.engines = list(engines)
         self.route = route
-        (self.buckets, self.fill_threshold, self.wait_limit_s,
-         self.fifo_depth) = resolve_stream_params(
-            engines[0], buckets, costs, fill_threshold, wait_limit_s,
-            fifo_depth, max_batch)
-        if shed_deadline_s is not None and not shed_deadline_s > 0:
-            raise ValueError(
-                f"shed_deadline_s must be > 0 or None, got {shed_deadline_s}")
-        self.shed_deadline_s = shed_deadline_s
-        if admission_depth is None:
-            # default: room for every FIFO to refill once while a full
-            # complement is buffered — deep enough to ride a burst, bounded
-            # so overload surfaces as shedding, not unbounded queue growth
-            admission_depth = 2 * len(engines) * self.fifo_depth \
-                * self.buckets[-1]
-        self.admission_depth = int(admission_depth)
-        if self.admission_depth < 1:
-            raise ValueError(
-                f"admission_depth must be >= 1, got {admission_depth}")
+        self.buckets = self._topo.buckets
+        self.fill_threshold = self._topo.fill_threshold
+        self.wait_limit_s = self._topo.wait_limit_s
+        self.fifo_depth = self._topo.fifo_depth
+        self.shed_deadline_s = self._topo.shed_deadline_s
+        self.admission_depth = self._topo.admission_depth
 
-    # -- routing --------------------------------------------------------------
-    def _pick_worker(self, workers):
-        """Next worker to feed, honoring credits; None = all backpressured."""
-        if self.route == "round-robin":
-            for off in range(len(workers)):
-                w = workers[(self._rr + off) % len(workers)]
-                if w.room() > 0:
-                    self._rr = (self._rr + off + 1) % len(workers)
-                    return w
-            return None
-        live = [w for w in workers if w.room() > 0]
-        if not live:
-            return None
-        return min(live, key=lambda w: (w.in_flight, len(w.buf)))
-
-    def _route_admitted(self, admission: deque, workers):
-        """Deal queries from the admission queue to workers in flush-sized
-        chunks (one chunk = at most one flush quantum, so round-robin
-        genuinely interleaves engines instead of filling the first)."""
-        quantum = max(1, min(self.fill_threshold, self.buckets[-1]))
-        while admission:
-            w = self._pick_worker(workers)
-            if w is None:
-                return                      # credit-based backpressure
-            for _ in range(min(w.room(), quantum, len(admission))):
-                w.submit(admission.popleft())
-
-    # -- the run loop ---------------------------------------------------------
     def run(self, queries, arrival_times=None) -> FleetReport:
         """Replay a (possibly timed) stream through the fleet; see
         StreamingScheduler.run for the arrival-replay semantics."""
-        q = np.asarray(queries, np.float32)
-        n = len(q)
-        arr = np.zeros(n) if arrival_times is None \
-            else np.asarray(arrival_times, np.float64)
-        order = np.argsort(arr, kind="stable")
-        sink = StreamSink(q, arr, self.engines[0].scfg.k)
-        workers = [EngineWorker(e, sink, buckets=self.buckets,
-                                fill_threshold=self.fill_threshold,
-                                wait_limit_s=self.wait_limit_s,
-                                fifo_depth=self.fifo_depth)
-                   for e in self.engines]
-        admission: deque = deque()          # indices, arrival order
-        shed = np.zeros(n, bool)
-        shed_wait = np.full(n, np.nan)
-        self._rr = 0
-        i = 0
-
-        def shed_one(idx: int, wait: float):
-            shed[idx] = True
-            shed_wait[idx] = wait
-
-        while i < n or admission or not all(w.idle() for w in workers):
-            t = sink.now()
-            # 1. arrivals -> bounded admission queue (overflow sheds now)
-            while i < n and arr[order[i]] <= t:
-                idx = int(order[i])
-                i += 1
-                if len(admission) >= self.admission_depth:
-                    shed_one(idx, t - arr[idx])
-                else:
-                    admission.append(idx)
-            # 2. deadline shedding at the head of the queue — checked before
-            # routing so every dispatched query started within its deadline
-            if self.shed_deadline_s is not None:
-                while admission \
-                        and t - arr[admission[0]] >= self.shed_deadline_s:
-                    idx = admission.popleft()
-                    shed_one(idx, t - arr[idx])
-            # 3. deal admitted queries to workers with credits
-            self._route_admitted(admission, workers)
-            # 4. pump + harvest every worker, non-blocking: one slow engine
-            # must not stall its siblings (that is the fleet's whole point)
-            drain = i >= n and not admission
-            progress = False
-            for w in workers:
-                progress |= w.pump(t, drain=drain, block_when_full=False)
-            for w in workers:
-                progress |= w.harvest(block=False)
-            if progress:
-                continue
-            # 5. idle: nap until the next arrival / flush deadline / shed
-            # deadline, or block on a device if that is all that's left
-            nxt = arr[order[i]] if i < n else math.inf
-            for w in workers:
-                nxt = min(nxt, w.next_deadline())
-            if admission and self.shed_deadline_s is not None:
-                nxt = min(nxt, arr[admission[0]] + self.shed_deadline_s)
-            if not math.isfinite(nxt):
-                for w in workers:
-                    if w.inflight:
-                        w.harvest(block=True)
-                        break
-                continue
-            # dt <= 0 means a flush deadline already passed but every worker
-            # is out of credits — nap briefly instead of spinning until a
-            # device frees a slot
-            dt = nxt - sink.now()
-            time.sleep(min(max(dt, 5e-5), 5e-4))
-        makespan = sink.now()
-
-        n_shed = int(shed.sum())
-        n_admitted = n - n_shed
-        flush_sizes = [s for w in workers for s in w.flush_sizes]
-        per_engine = []
-        seen_caches: set[int] = set()
-        for j, w in enumerate(workers):
-            # replicas built with share_executables share one compile cache;
-            # attribute its compiles to the first worker on that cache so
-            # summing per-engine compiles counts each executable once
-            cache = id(getattr(w.engine, "_search_cache", w.engine))
-            per_engine.append({"engine": j, "flushes": len(w.flush_sizes),
-                               "queries": int(sum(w.flush_sizes)),
-                               "max_in_flight": w.max_in_flight,
-                               "compiles": w.compiles
-                               if cache not in seen_caches else 0})
-            seen_caches.add(cache)
+        r = self._topo.run(queries, arrival_times)
+        per_engine = [{k: d[k] for k in ("engine", "flushes", "queries",
+                                         "max_in_flight", "compiles")}
+                      for d in r.per_engine]
         return FleetReport(
-            ids=sink.out_ids, dists=sink.out_d, latency_s=sink.lat,
-            shed=shed, shed_wait_s=shed_wait,
-            shed_fraction=n_shed / n if n else 0.0,
-            qps=n_admitted / makespan if makespan > 0 else 0.0,
-            p50_ms=percentile_ms(sink.lat, 50),
-            p99_ms=percentile_ms(sink.lat, 99),
-            n_queries=n, n_admitted=n_admitted, n_shed=n_shed,
-            n_flushes=len(flush_sizes), flush_sizes=flush_sizes,
-            per_engine=per_engine, makespan_s=makespan, route=self.route,
-            backend=getattr(getattr(self.engines[0], "scfg", None),
-                            "mode", ""))
+            ids=r.ids, dists=r.dists, latency_s=r.latency_s, shed=r.shed,
+            shed_wait_s=r.shed_wait_s, shed_fraction=r.shed_fraction,
+            qps=r.qps, p50_ms=r.p50_ms, p99_ms=r.p99_ms,
+            n_queries=r.n_queries, n_admitted=r.n_admitted, n_shed=r.n_shed,
+            n_flushes=r.n_flushes, flush_sizes=r.flush_sizes,
+            per_engine=per_engine, makespan_s=r.makespan_s, route=r.route,
+            backend=r.backends[0])
 
 
 # ---------------------------------------------------------------------------
@@ -301,113 +134,23 @@ def partition_engine(eng, n_parts: int, *, mem_budget: int | None = None,
                      strict: bool = False, modes=None, inner_shards: int = 1,
                      freq: np.ndarray | None = None,
                      **stream_kw) -> "ShardedFleet":
-    """Partition one built engine's clusters across ``n_parts`` engines.
-
-    Unlike ``replicate_engine`` (N schedulable views of ONE index copy),
-    each partition engine holds a DISJOINT cluster slice chosen by
-    ``placement.greedy_place`` over (freq, compact bytes) — per-engine
-    memory scales down ~1/N, the way billion-scale PIM cluster deployments
-    must shard. ``mem_budget`` (compact-index bytes) caps each partition;
-    with ``strict=True`` an infeasible partitioning raises instead of
-    silently overflowing a node. ``modes`` optionally gives each partition
-    its own RankingBackend registry key (a heterogeneous fleet — queries
-    may then request a backend and are routed only to matching shards).
-    ``inner_shards`` is each partition's intra-engine model-axis shard
-    count. The host store (raw rerank vectors, global-id addressed) stays
-    shared: per-shard rerank needs no id translation.
+    """Partition one built engine's clusters across ``n_parts`` engines and
+    wrap them in a ``ShardedFleet`` (see ``core.topology.partition_index``
+    for the slicing semantics — disjoint cluster slices via
+    ``placement.greedy_place``, ~1/N memory per engine, optional strict
+    ``mem_budget`` and per-partition ``modes``).
 
     Extra keyword args flow to the ShardedFleet stream parameters
-    (buckets, fill_threshold, wait_limit_s, fifo_depth, ...).
-    """
-    if n_parts < 1:
-        raise ValueError(f"need at least one partition, got {n_parts}")
-    if modes is not None and len(modes) != n_parts:
-        raise ValueError(f"modes has {len(modes)} entries for {n_parts} "
-                         f"partitions")
-    idx, icfg = eng.index, eng.icfg
-    sizes = np.asarray(idx.n_valid).astype(np.float64)
-    bpc = sizes * compact_index_mod.compact_bytes_per_node(icfg.dim,
-                                                           icfg.degree)
-    if freq is None:
-        freq = sizes                      # popularity ~ size as prior
-    pl = placement_mod.greedy_place(np.asarray(freq, np.float64), bpc,
-                                    n_parts, mem_budget=mem_budget,
-                                    strict=strict)
-    engines = []
-    for o in range(n_parts):
-        members = pl.order[o * pl.per_shard:(o + 1) * pl.per_shard]
-        sub = compact_index_mod.CompactIndex(
-            codes=idx.codes[members], f_add=idx.f_add[members],
-            neighbors=idx.neighbors[members], entry=idx.entry[members],
-            n_valid=idx.n_valid[members], node_ids=idx.node_ids[members],
-            centroids=idx.centroids[members], alpha=idx.alpha[members],
-            rho=idx.rho[members], shift1=idx.shift1[members],
-            shift2=idx.shift2[members],
-            residual_norm=idx.residual_norm[members],
-            cos_theta=idx.cos_theta[members],
-            rotation=idx.rotation, dim=idx.dim)
-        sub_pl = placement_mod.greedy_place(sizes[members], bpc[members],
-                                            inner_shards)
-        scfg = dataclasses.replace(eng.scfg, mode=modes[o]) \
-            if modes is not None else eng.scfg
-        engines.append(engine_mod.PIMCQGEngine(sub, eng.host, sub_pl, icfg,
-                                               scfg, buckets=eng.buckets))
+    (buckets, fill_threshold, wait_limit_s, fifo_depth, ...). For the same
+    partitioning with tier-wide admission control / shedding / per-shard
+    replication, build it via ``topology(eng, shards=N, replicas=R, ...)``
+    instead."""
+    engines, pl = partition_index(eng, n_parts, mem_budget=mem_budget,
+                                  strict=strict, modes=modes,
+                                  inner_shards=inner_shards, freq=freq)
     return ShardedFleet(engines, part_of=pl.shard_of,
-                        local_cid=pl.local_slot, centroids=idx.centroids,
-                        **stream_kw)
-
-
-class ShardWorker(EngineWorker):
-    """EngineWorker over one PARTITION of the index. A flush carries the
-    per-query probe rows for this engine's clusters (the scatter payload,
-    consumed by ``engine.search_probed``), and a harvest deposits PARTIAL
-    top-k into the ShardedSink's gather slots instead of final results."""
-
-    def __init__(self, engine, sink: "ShardedSink", *, probes: np.ndarray,
-                 slot: np.ndarray, **kw):
-        super().__init__(engine, sink, **kw)
-        self.probes = probes              # (N, P) local cluster ids, -1 hole
-        self.slot = slot                  # (N,) this shard's gather slot
-
-    def _dispatch(self, take):
-        nq = len(take)
-        for b in self.buckets:
-            if b >= nq:
-                return self.engine.search_probed(
-                    self.sink.q[take], self.probes[take], pad_to=b)
-        raise AssertionError(
-            f"flush of {nq} exceeds max bucket {self.buckets[-1]}")
-
-    def _finish(self, idxs, res, _t_dispatch):
-        self.sink.finish_partial(idxs, self.slot[idxs],
-                                 np.asarray(res.ids), np.asarray(res.dists))
-
-
-class ShardedSink(StreamSink):
-    """StreamSink plus the gather stage of the sharded tier: a per-query
-    buffer of each owning shard's partial top-k (slot-major), a countdown
-    of outstanding shards, and the queue of fully-gathered queries awaiting
-    the origin's merge rerank."""
-
-    def __init__(self, queries: np.ndarray, arrivals: np.ndarray, k: int,
-                 fanout: int):
-        super().__init__(queries, arrivals, k)
-        n = len(queries)
-        self.k = k
-        self.part_ids = np.full((n, fanout * k), -1, np.int32)
-        self.part_d = np.full((n, fanout * k), np.inf, np.float32)
-        self.pending = np.zeros(n, np.int32)
-        self.ready: deque = deque()       # (idx, gather-complete time)
-
-    def finish_partial(self, idxs: np.ndarray, slots: np.ndarray,
-                       ids: np.ndarray, dists: np.ndarray):
-        cols = slots[:, None] * self.k + np.arange(self.k)
-        self.part_ids[idxs[:, None], cols] = ids
-        self.part_d[idxs[:, None], cols] = dists
-        self.pending[idxs] -= 1
-        t = self.now()
-        for i in idxs[self.pending[idxs] == 0]:
-            self.ready.append((int(i), t))
+                        local_cid=pl.local_slot,
+                        centroids=eng.index.centroids, **stream_kw)
 
 
 @dataclasses.dataclass
@@ -435,7 +178,11 @@ class ShardedReport:
 
 
 class ShardedFleet:
-    """Scatter/gather serving over a PARTITIONED index (paper Fig 18).
+    """Scatter/gather serving over a PARTITIONED index (paper Fig 18) — a
+    facade over ``ServingTopology`` with one single-replica group per
+    shard, in the legacy eager-scatter configuration (no admission queue,
+    no shedding: arrivals scatter immediately and flushes self-limit on
+    engine credits, exactly the pre-refactor behavior).
 
     The origin host runs the IVF top-probe selection once per query (the
     same ``cluster_filter`` a single engine jits), scatters the query only
@@ -465,172 +212,43 @@ class ShardedFleet:
                  max_batch: int = 64):
         if not engines:
             raise ValueError("ShardedFleet needs at least one engine")
-        ks = {e.scfg.k for e in engines}
-        if len(ks) != 1:
-            raise ValueError(f"engines disagree on k: {sorted(ks)}")
-        nps = {e.scfg.nprobe for e in engines}
-        if len(nps) != 1:
-            raise ValueError(f"engines disagree on nprobe: {sorted(nps)}")
+        self._topo = ServingTopology(
+            [[e] for e in engines], part_of=part_of, local_cid=local_cid,
+            centroids=centroids, buckets=buckets, costs=costs,
+            fill_threshold=fill_threshold, wait_limit_s=wait_limit_s,
+            fifo_depth=fifo_depth, max_batch=max_batch,
+            admission_depth=None, shed_deadline_s=None, backpressure=False)
         self.engines = list(engines)
-        self.part_of = np.asarray(part_of, np.int32)
-        self.local_cid = np.asarray(local_cid, np.int32)
-        self.centroids = jnp.asarray(centroids)
-        if not (len(self.part_of) == len(self.local_cid)
-                == self.centroids.shape[0]):
-            raise ValueError("part_of/local_cid/centroids disagree on the "
-                             "cluster count")
-        counts = np.bincount(self.part_of, minlength=len(self.engines))
-        for o, e in enumerate(self.engines):
-            if counts[o] != e.index.n_clusters:
-                raise ValueError(
-                    f"engine {o} holds {e.index.n_clusters} clusters but "
-                    f"part_of assigns it {counts[o]}")
-        self.k = engines[0].scfg.k
-        self.nprobe = engines[0].scfg.nprobe
-        self.modes = [e.scfg.mode for e in engines]
-        self.vectors = engines[0].host.vectors
-        (self.buckets, self.fill_threshold, self.wait_limit_s,
-         self.fifo_depth) = resolve_stream_params(
-            engines[0], buckets, costs, fill_threshold, wait_limit_s,
-            fifo_depth, max_batch)
-        self.fanout = max(1, min(self.nprobe, len(self.engines)))
+        self.part_of = self._topo.part_of
+        self.local_cid = self._topo.local_cid
+        self.centroids = self._topo.centroids
+        self.k = self._topo.k
+        self.nprobe = self._topo.nprobe
+        self.modes = list(self._topo.modes)
+        self.vectors = self._topo.vectors
+        self.buckets = self._topo.buckets
+        self.fill_threshold = self._topo.fill_threshold
+        self.wait_limit_s = self._topo.wait_limit_s
+        self.fifo_depth = self._topo.fifo_depth
+        self.fanout = self._topo.fanout
 
-    # -- scatter routing ------------------------------------------------------
-    def _route(self, q: np.ndarray, backend):
-        """① IVF top-probe selection on the origin, ② backend match filter,
-        ③ per-owner scatter split. Returns (tables (O, N, P), touches
-        (N, O))."""
-        probe = np.asarray(ivf_mod.cluster_filter(
-            jnp.asarray(q), self.centroids, nprobe=self.nprobe)[0])
-        live = None
-        if backend is not None:
-            req = np.full(len(q), backend, object) \
-                if isinstance(backend, str) \
-                else np.asarray(list(backend), object)
-            if len(req) != len(q):
-                raise ValueError(
-                    f"backend list length {len(req)} != {len(q)} queries")
-            known = set(self.modes)
-            missing = {b for b in req.tolist() if b is not None} - known
-            if missing:
-                raise ValueError(
-                    f"no shard serves backend(s) {sorted(missing)}; this "
-                    f"fleet serves {sorted(known)}")
-            modes = np.asarray(self.modes, object)
-            match_all = np.asarray([b is None for b in req.tolist()])
-            live = (modes[self.part_of[probe]] == req[:, None]) \
-                | match_all[:, None]
-        return ivf_mod.split_probes_by_owner(
-            probe, self.part_of, self.local_cid, len(self.engines),
-            live=live)
-
-    # -- origin gather/merge --------------------------------------------------
-    def _merge(self, sink: ShardedSink, t: float, drain: bool,
-               merge_sizes: list) -> bool:
-        """Merge fully-gathered queries' per-shard partial top-k through the
-        existing sort-based rerank path (exact distances recomputed from the
-        shared host store), flushed in bucket-padded batches like any other
-        stage so merging adds at most len(buckets) executables."""
-        if not sink.ready:
-            return False
-        if not (len(sink.ready) >= self.fill_threshold or drain
-                or t - sink.ready[0][1] >= self.wait_limit_s):
-            return False
-        take = []
-        while sink.ready and len(take) < self.buckets[-1]:
-            take.append(sink.ready.popleft()[0])
-        take = np.asarray(take)
-        nq = len(take)
-        b = next(bb for bb in self.buckets if bb >= nq)
-        qb = np.zeros((b, sink.q.shape[1]), np.float32)
-        qb[:nq] = sink.q[take]
-        cb = np.full((b, sink.part_ids.shape[1]), -1, np.int32)
-        cb[:nq] = sink.part_ids[take]
-        out = rerank_mod.rerank(jnp.asarray(qb), jnp.asarray(cb),
-                                self.vectors, k=self.k)
-        sink.finish(take, np.asarray(out.ids)[:nq], np.asarray(out.dists)[:nq])
-        merge_sizes.append(nq)
-        return True
-
-    # -- the run loop ---------------------------------------------------------
     def run(self, queries, arrival_times=None, backend=None) -> ShardedReport:
         """Replay a (possibly timed) stream through the sharded fleet; see
         StreamingScheduler.run for the arrival-replay semantics. ``backend``
         (None | registry key | per-query sequence of keys/None) restricts
         each query to matching shards."""
-        q = np.asarray(queries, np.float32)
-        n = len(q)
-        arr = np.zeros(n) if arrival_times is None \
-            else np.asarray(arrival_times, np.float64)
-        order = np.argsort(arr, kind="stable")
-        tables, touches = self._route(q, backend)
-        slots = np.cumsum(touches, axis=1) - 1
-        pending = touches.sum(axis=1).astype(np.int32)
-        sink = ShardedSink(q, arr, self.k, self.fanout)
-        sink.pending[:] = pending
-        workers = [ShardWorker(e, sink, probes=tables[o], slot=slots[:, o],
-                               buckets=self.buckets,
-                               fill_threshold=self.fill_threshold,
-                               wait_limit_s=self.wait_limit_s,
-                               fifo_depth=self.fifo_depth)
-                   for o, e in enumerate(self.engines)]
-        merge_sizes: list = []
-        none_ids = np.full((1, self.k), -1, np.int32)
-        none_d = np.full((1, self.k), np.inf, np.float32)
-        i = 0
-        while i < n or not all(w.idle() for w in workers) or sink.ready:
-            t = sink.now()
-            # 1. arrivals: scatter each query to the shards owning its probes
-            while i < n and arr[order[i]] <= t:
-                idx = int(order[i])
-                i += 1
-                if pending[idx] == 0:     # unrouted: completes at arrival
-                    sink.finish(np.asarray([idx]), none_ids, none_d)
-                    continue
-                for o in np.nonzero(touches[idx])[0]:
-                    workers[int(o)].submit(idx)
-            # 2. pump + harvest every shard non-blocking, then merge gathered
-            drain = i >= n
-            progress = False
-            for w in workers:
-                progress |= w.pump(t, drain=drain, block_when_full=False)
-            for w in workers:
-                progress |= w.harvest(block=False)
-            progress |= self._merge(sink, t, drain, merge_sizes)
-            if progress:
-                continue
-            # 3. idle: nap until the next arrival / flush / merge deadline,
-            # or block on a shard's device if that is all that's left
-            nxt = arr[order[i]] if i < n else math.inf
-            for w in workers:
-                nxt = min(nxt, w.next_deadline())
-            if sink.ready:
-                nxt = min(nxt, sink.ready[0][1] + self.wait_limit_s)
-            if not math.isfinite(nxt):
-                for w in workers:
-                    if w.inflight:
-                        w.harvest(block=True)
-                        break
-                continue
-            dt = nxt - sink.now()
-            time.sleep(min(max(dt, 5e-5), 5e-4))
-        makespan = sink.now()
-
-        flush_sizes = [s for w in workers for s in w.flush_sizes]
-        per_engine = [{"engine": o, "backend": self.modes[o],
-                       "flushes": len(w.flush_sizes),
-                       "queries": int(sum(w.flush_sizes)),
-                       "max_in_flight": w.max_in_flight,
-                       "clusters": int(self.engines[o].index.n_clusters)}
-                      for o, w in enumerate(workers)]
+        r = self._topo.run(queries, arrival_times, backend=backend)
+        per_engine = [{"engine": d["shard"], "backend": d["backend"],
+                       "flushes": d["flushes"], "queries": d["queries"],
+                       "max_in_flight": d["max_in_flight"],
+                       "clusters": d["clusters"]}
+                      for d in r.per_engine]
         return ShardedReport(
-            ids=sink.out_ids, dists=sink.out_d, latency_s=sink.lat,
-            qps=n / makespan if makespan > 0 else 0.0,
-            p50_ms=percentile_ms(sink.lat, 50),
-            p99_ms=percentile_ms(sink.lat, 99),
-            n_queries=n, n_flushes=len(flush_sizes),
-            flush_sizes=flush_sizes, n_merges=len(merge_sizes),
-            merge_sizes=merge_sizes,
-            fanout_mean=float(pending.mean()) if n else 0.0,
-            n_unrouted=int((pending == 0).sum()), per_engine=per_engine,
-            makespan_s=makespan, backends=list(self.modes))
+            ids=r.ids, dists=r.dists, latency_s=r.latency_s,
+            qps=r.n_queries / r.makespan_s if r.makespan_s > 0 else 0.0,
+            p50_ms=r.p50_ms, p99_ms=r.p99_ms, n_queries=r.n_queries,
+            n_flushes=r.n_flushes, flush_sizes=r.flush_sizes,
+            n_merges=r.n_merges, merge_sizes=r.merge_sizes,
+            fanout_mean=r.fanout_mean, n_unrouted=r.n_unrouted,
+            per_engine=per_engine, makespan_s=r.makespan_s,
+            backends=r.backends)

@@ -124,13 +124,17 @@ def split_probes_by_owner(probe_cids: np.ndarray, owner_of: np.ndarray,
 
     ``live`` (Q, P) bool optionally masks individual probes out (e.g. probes
     whose owner's backend does not match the query's requested backend in
-    heterogeneous routing).
+    heterogeneous routing). ``-1`` entries in ``probe_cids`` are holes
+    (already-masked probes) and are preserved as holes in every owner's
+    table — never resolved through the owner map.
     """
     probe_cids = np.asarray(probe_cids)
-    own = np.asarray(owner_of)[probe_cids]                 # (Q, P)
+    hole = probe_cids < 0
+    safe = np.where(hole, 0, probe_cids)                   # avoid -1 wrap
+    own = np.where(hole, -1, np.asarray(owner_of)[safe])   # (Q, P)
     if live is not None:
         own = np.where(live, own, -1)
-    local = np.where(own >= 0, np.asarray(local_cid)[probe_cids], -1)
+    local = np.where(own >= 0, np.asarray(local_cid)[safe], -1)
     tables = np.stack([np.where(own == o, local, -1).astype(np.int32)
                        for o in range(n_owners)])
     touches = (tables >= 0).any(axis=2).T                  # (Q, O)

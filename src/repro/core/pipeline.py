@@ -47,7 +47,7 @@ import numpy as np
 __all__ = [
     "LinkModel", "UPMEM_LINK", "TPU_ICI_LINK", "PCIE_LINK",
     "StageCosts", "tune_minibatch", "bucket_ladder",
-    "EventSimulator", "SimReport", "round_robin_batches",
+    "EventSimulator", "SimReport", "RetryPolicy", "round_robin_batches",
     "EngineWorker", "StreamSink", "StreamingScheduler", "StreamReport",
     "percentile_ms", "resolve_stream_params",
 ]
@@ -156,6 +156,25 @@ def round_robin_batches(pus, minibatch: int) -> list[tuple[int, int, float]]:
     keyed.sort()
     return [(pu, nq, 0.0) for _, pu, nq in keyed]
 
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Shed-aware client retry model (ROADMAP open item): a batch shed at
+    admission is re-offered ``backoff_s`` after its deadline expired, as a
+    fresh arrival with a fresh deadline, up to ``max_attempts`` total
+    offers (1 = no retries). Completed-batch latency is still measured
+    from the ORIGINAL arrival, so retries honestly inflate the tail they
+    rescue; a batch that exhausts its attempts counts shed exactly once."""
+    max_attempts: int = 2
+    backoff_s: float = 5e-3
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1, got {self.max_attempts}")
+        if not self.backoff_s >= 0:
+            raise ValueError(f"backoff_s must be >= 0, got {self.backoff_s}")
+
+
 @dataclasses.dataclass
 class SimReport:
     qps: float                # completed queries / makespan (goodput)
@@ -166,6 +185,7 @@ class SimReport:
     n_queries: int            # completed (admitted) queries
     n_shed: int = 0           # queries dropped by the shedding policy
     shed_fraction: float = 0.0  # n_shed / offered
+    n_retries: int = 0        # shed batches re-offered by the retry policy
 
 
 class EventSimulator:
@@ -197,14 +217,18 @@ class EventSimulator:
     # links), one server per PU, rerank pool (W servers). Each stage has its
     # own FIFO; stages of different batches overlap freely — this is exactly
     # the concurrency structure of Fig 8 (async pipeline).
-    def _run_batches(self, batches, shed_deadline_s: float | None = None):
+    def _run_batches(self, batches, shed_deadline_s: float | None = None,
+                     retry: RetryPolicy | None = None):
         """batches: list of (pu, n_queries, ready_time); returns SimReport.
 
         With ``shed_deadline_s`` set, a batch whose host prep could not
         start within the deadline of its ready time is shed (admission-time
         load shedding): its queries count toward ``shed_fraction`` instead
         of completing, so overload saturates goodput instead of growing
-        latency without bound."""
+        latency without bound. With ``retry`` also set, a shed batch is
+        re-offered ``backoff_s`` after its deadline expired (a fresh
+        arrival with a fresh deadline) until ``max_attempts`` offers are
+        exhausted — the shed-aware client model."""
         c = self.costs
         nres_in = "link"
         nres_out = "link_out" if self.full_duplex else "link"
@@ -223,6 +247,12 @@ class EventSimulator:
         gate_wait: deque = deque()          # batches held back by flow control
         done_t = {}
         n_shed = 0
+        n_retries = 0
+        # retries re-offer a batch at a LATER effective arrival (its own
+        # deadline clock); completed latency still reads batches[i][2], the
+        # original arrival, so retried batches pay their full queue+backoff
+        arrival_of = [b[2] for b in batches]
+        attempts = [1] * len(batches)
         end = 0.0
         limit = self.fifo_depth * self.n_pus
 
@@ -242,7 +272,19 @@ class EventSimulator:
             pu, n, arrival = batches[i]
             if stage == 0:
                 if shed_deadline_s is not None \
-                        and max(ready, free["prep"]) - arrival > shed_deadline_s:
+                        and max(ready, free["prep"]) - arrival_of[i] \
+                        > shed_deadline_s:
+                    if retry is not None \
+                            and attempts[i] < retry.max_attempts:
+                        # the system drops the batch when its deadline
+                        # expires; the client re-offers it backoff later
+                        attempts[i] += 1
+                        n_retries += 1
+                        t_retry = arrival_of[i] + shed_deadline_s \
+                            + retry.backoff_s
+                        arrival_of[i] = t_retry
+                        heapq.heappush(ev, (t_retry, i, 0))
+                        continue
                     n_shed += n        # shed at admission: prep never starts
                     if gate_wait:      # forward the flow-control release
                         j, jready = gate_wait.popleft()   # token a completed
@@ -294,7 +336,8 @@ class EventSimulator:
                          if end > 0 else {k: 0.0 for k in busy},
                          stage_time=dict(busy), makespan_s=end, n_queries=nq,
                          n_shed=n_shed,
-                         shed_fraction=n_shed / offered if offered else 0.0)
+                         shed_fraction=n_shed / offered if offered else 0.0,
+                         n_retries=n_retries)
 
     # -- policies -------------------------------------------------------------
     def per_query(self, n_queries: int, pu_of_query=None) -> SimReport:
@@ -342,12 +385,16 @@ class EventSimulator:
 
     def dynamic(self, arrival_times: np.ndarray, pu_of_query: np.ndarray,
                 threshold: int, wait_limit_s: float,
-                shed_deadline_s: float | None = None) -> SimReport:
+                shed_deadline_s: float | None = None,
+                retry: RetryPolicy | None = None) -> SimReport:
         """Fig 7(c): per-PU buffers; flush on fill OR oldest-query timeout.
 
         ``shed_deadline_s`` enables the fleet tier's admission-deadline
         shedding (see ``_run_batches``) so the simulator predicts the
-        goodput plateau the real FleetScheduler measures under overload."""
+        goodput plateau the real FleetScheduler measures under overload;
+        ``retry`` adds the shed-aware client model on top (shed batches
+        re-offered after backoff, ``SimReport.n_retries``) — the
+        retry-storm-vs-plateau overlay in benchmarks/overload.py."""
         order = np.argsort(arrival_times)
         buf: dict[int, list] = {p: [] for p in range(self.n_pus)}
         oldest: dict[int, float] = {}
@@ -376,7 +423,7 @@ class EventSimulator:
         for pu in sorted(oldest):
             flush(pu, oldest[pu] + wait_limit_s)
         batches.sort(key=lambda b: b[2])
-        return self._run_batches(batches, shed_deadline_s)
+        return self._run_batches(batches, shed_deadline_s, retry)
 
 
 # ---------------------------------------------------------------------------
@@ -500,19 +547,23 @@ class EngineWorker:
         self.buf.append(idx)
 
     # -- dispatch / harvest ---------------------------------------------------
+    def _bucket_for(self, nq: int) -> int:
+        """Smallest ladder bucket holding a flush of ``nq`` queries (the
+        shared pad-shape choice of every dispatch path)."""
+        for b in self.buckets:
+            if b >= nq:
+                return b
+        raise AssertionError(
+            f"flush of {nq} exceeds max bucket {self.buckets[-1]}")
+
     def _dispatch(self, take):
         """Pad a flush (``take``: query indices into the sink) up to the
         worker's own ladder — the engine is shared state and is never
-        reconfigured from here. Subclasses (e.g. the sharded fleet's
+        reconfigured from here. Subclasses (e.g. the sharded tier's
         ShardWorker) override this to attach per-query payloads such as
         probe tables to the same flush."""
         q = self.sink.q[take]
-        nq = len(q)
-        for b in self.buckets:
-            if b >= nq:
-                return self.engine.search(q, pad_to=b)
-        raise AssertionError(
-            f"flush of {nq} exceeds max bucket {self.buckets[-1]}")
+        return self.engine.search(q, pad_to=self._bucket_for(len(q)))
 
     @staticmethod
     def _ready(res) -> bool:

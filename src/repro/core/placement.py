@@ -35,6 +35,14 @@ class Placement:
         """Reorder a (C, ...) cluster-stacked array into shard-major order."""
         return arr[self.order]
 
+    def members(self, shard: int) -> np.ndarray:
+        """Cluster ids placed on ``shard``, in local-slot order — slot s of
+        the shard is members(shard)[s] (the slice the partitioned serving
+        tier cuts per engine)."""
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} outside 0..{self.n_shards - 1}")
+        return self.order[shard * self.per_shard:(shard + 1) * self.per_shard]
+
 
 def greedy_place(freq: np.ndarray, bytes_per_cluster: np.ndarray,
                  n_shards: int, mem_budget: int | None = None,

@@ -1,0 +1,837 @@
+"""Composable serving topology: replicated x sharded tiers behind one
+admission controller (ISSUE 5 tentpole; paper Fig 18 + UpANNS/DRIM-ANN
+cluster serving).
+
+The repo grew its two fleet tiers as parallel classes: ``FleetScheduler``
+(replicas, WITH admission control / backpressure / deadline shedding) and
+``ShardedFleet`` (partitions, with none of the overload machinery). This
+module refactors the overload layer out so any topology gets it for free:
+
+  * ``AdmissionController`` — the bounded admission queue + deadline
+    shedding extracted from ``FleetScheduler`` (behavior unchanged: a full
+    queue sheds new arrivals immediately; a query still undispatched
+    ``shed_deadline_s`` after arrival is dropped before it ever reaches an
+    engine, so overload degrades to a goodput plateau with bounded p99).
+
+  * ``TierNode`` tree — ``ReplicaGroup`` deals arrivals across its
+    children (round-robin / least-in-flight over credit headroom, the same
+    dealing ``FleetScheduler`` did); ``ShardGroup`` scatter/gathers: each
+    query goes to the <= nprobe children owning its probed clusters
+    (``ivf.split_probes_by_owner``), each child answers a partial top-k
+    (``engine.search_probed``), and the origin merges the gathered
+    partials through the sort-based rerank path. Children of a
+    ``ShardGroup`` are ``ReplicaGroup``s, so ``topology(shards=N,
+    replicas=R)`` — each partition replicated R ways — composes with no
+    new machinery, and heterogeneous backend routing (per-shard
+    ``scfg.mode``) works uniformly at every level.
+
+  * ``ServingTopology`` — one run loop driving admission -> deal -> pump
+    -> harvest -> merge for every tree shape. ``core.fleet.FleetScheduler``
+    and ``core.fleet.ShardedFleet`` are thin facades over it (public APIs
+    and bit-parity contracts unchanged).
+
+Parity contract: admitted results of any topology are bit-identical to a
+single engine searching the same probed clusters — replication shares one
+placed index per shard, partitioning keeps cluster slices disjoint, and
+exact distances are recomputed at the origin merge (pinned in
+tests/test_topology.py for shards in {2, 4} x replicas in {1, 2}, batch +
+Poisson streams, and in tests/test_fleet.py / tests/test_sharded.py for
+the facades).
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import math
+import time
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import compact_index as compact_index_mod
+from . import engine as engine_mod
+from . import ivf as ivf_mod
+from . import placement as placement_mod
+from . import rerank as rerank_mod
+from .pipeline import (EngineWorker, StageCosts, StreamSink, percentile_ms,
+                       resolve_stream_params)
+
+__all__ = ["AdmissionController", "ReplicaGroup", "ShardGroup",
+           "ShardWorker", "ShardedSink", "ServingTopology", "TopologyReport",
+           "replicate_engine", "partition_index", "topology"]
+
+ROUTE_POLICIES = ("round-robin", "least-in-flight")
+
+
+# ---------------------------------------------------------------------------
+# engine multiplication: replicas (one index copy) and partitions (slices)
+# ---------------------------------------------------------------------------
+
+def replicate_engine(eng, n: int, *, share_executables: bool = True) -> list:
+    """N logical replicas of one built PIMCQGEngine for a single-host tier.
+
+    Replicas share the placed index arrays (one device copy — they model N
+    schedulable engines, not N copies of the corpus). With
+    ``share_executables`` (default) they also share the compiled-search
+    cache, so the tier warms ``len(buckets)`` executables total instead of
+    per replica; pass False to give each replica its own cache (what
+    distinct hosts would have)."""
+    if n < 1:
+        raise ValueError(f"need at least one replica, got {n}")
+    out = [eng]
+    for _ in range(n - 1):
+        rep = copy.copy(eng)
+        if not share_executables:
+            rep._search_cache = {}
+        out.append(rep)
+    return out
+
+
+def partition_index(eng, n_parts: int, *, mem_budget: int | None = None,
+                    strict: bool = False, modes=None, inner_shards: int = 1,
+                    freq: np.ndarray | None = None
+                    ) -> tuple[list, placement_mod.Placement]:
+    """Slice one built engine's clusters into ``n_parts`` disjoint engines.
+
+    Unlike ``replicate_engine`` (N schedulable views of ONE index copy),
+    each partition engine holds a DISJOINT cluster slice chosen by
+    ``placement.greedy_place`` over (freq, compact bytes) — per-engine
+    memory scales down ~1/N, the way billion-scale PIM cluster deployments
+    must shard. ``mem_budget`` (compact-index bytes) caps each partition;
+    with ``strict=True`` an infeasible partitioning raises instead of
+    silently overflowing a node. ``modes`` optionally gives each partition
+    its own RankingBackend registry key (a heterogeneous fleet).
+    ``inner_shards`` is each partition's intra-engine model-axis shard
+    count. The host store (raw rerank vectors, global-id addressed) stays
+    shared: per-shard rerank needs no id translation.
+
+    Returns (engines, placement); ``placement.shard_of``/``local_slot``
+    are the owner map and per-owner local cluster ids the scatter router
+    consumes."""
+    if n_parts < 1:
+        raise ValueError(f"need at least one partition, got {n_parts}")
+    if modes is not None and len(modes) != n_parts:
+        raise ValueError(f"modes has {len(modes)} entries for {n_parts} "
+                         f"partitions")
+    idx, icfg = eng.index, eng.icfg
+    sizes = np.asarray(idx.n_valid).astype(np.float64)
+    bpc = sizes * compact_index_mod.compact_bytes_per_node(icfg.dim,
+                                                           icfg.degree)
+    if freq is None:
+        freq = sizes                      # popularity ~ size as prior
+    pl = placement_mod.greedy_place(np.asarray(freq, np.float64), bpc,
+                                    n_parts, mem_budget=mem_budget,
+                                    strict=strict)
+    engines = []
+    for o in range(n_parts):
+        members = pl.members(o)
+        sub = compact_index_mod.CompactIndex(
+            codes=idx.codes[members], f_add=idx.f_add[members],
+            neighbors=idx.neighbors[members], entry=idx.entry[members],
+            n_valid=idx.n_valid[members], node_ids=idx.node_ids[members],
+            centroids=idx.centroids[members], alpha=idx.alpha[members],
+            rho=idx.rho[members], shift1=idx.shift1[members],
+            shift2=idx.shift2[members],
+            residual_norm=idx.residual_norm[members],
+            cos_theta=idx.cos_theta[members],
+            rotation=idx.rotation, dim=idx.dim)
+        sub_pl = placement_mod.greedy_place(sizes[members], bpc[members],
+                                            inner_shards)
+        scfg = dataclasses.replace(eng.scfg, mode=modes[o]) \
+            if modes is not None else eng.scfg
+        engines.append(engine_mod.PIMCQGEngine(sub, eng.host, sub_pl, icfg,
+                                               scfg, buckets=eng.buckets))
+    return engines, pl
+
+
+# ---------------------------------------------------------------------------
+# admission control (extracted from FleetScheduler, PR 3 — behavior pinned)
+# ---------------------------------------------------------------------------
+
+class AdmissionController:
+    """Bounded admission queue + deadline shedding in front of a tier tree.
+
+    ``offer`` admits an arrival into the FIFO unless the queue is full
+    (``depth`` entries; None = unbounded) — a full queue sheds the arrival
+    immediately. ``expire`` drops queries at the HEAD of the queue whose
+    wait has reached ``deadline_s`` (the queue is arrival-ordered, so the
+    head is always the oldest): every query that IS dealt downstream
+    started within its deadline. Credit-based backpressure is the other
+    half of the contract, but it lives in the tier nodes (``room()``) —
+    the controller only holds what the tree refuses."""
+
+    def __init__(self, depth: int | None, deadline_s: float | None,
+                 arrivals: np.ndarray):
+        self.depth = depth
+        self.deadline_s = deadline_s
+        self.arr = arrivals
+        self.queue: deque = deque()       # query indices, arrival order
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    def offer(self, idx: int) -> bool:
+        """Admit an arrival; False = queue full, shed immediately."""
+        if self.depth is not None and len(self.queue) >= self.depth:
+            return False
+        self.queue.append(idx)
+        return True
+
+    def expire(self, t: float) -> list[int]:
+        """Pop (to shed) every head-of-queue query past its deadline."""
+        out: list[int] = []
+        if self.deadline_s is not None:
+            while self.queue \
+                    and t - self.arr[self.queue[0]] >= self.deadline_s:
+                out.append(self.queue.popleft())
+        return out
+
+    def next_deadline(self) -> float:
+        """When the current head would be shed (inf if nothing can be)."""
+        if self.deadline_s is None or not self.queue:
+            return math.inf
+        return float(self.arr[self.queue[0]]) + self.deadline_s
+
+
+# ---------------------------------------------------------------------------
+# tier nodes (per-run runtime objects; leaves are EngineWorkers)
+# ---------------------------------------------------------------------------
+
+class ReplicaGroup:
+    """Deal arrivals across N children serving the SAME data (engine
+    replicas of one index copy — or of one partition, under a ShardGroup).
+
+    Routing honors credits: ``round-robin`` deterministically cycles the
+    children with room; ``least-in-flight`` joins the shortest queue
+    (device FIFO depth, then buffer). ``deal`` consumes an admission queue
+    in flush-sized chunks (one chunk = at most one flush quantum, so
+    round-robin genuinely interleaves engines instead of filling the
+    first); ``submit`` places a single query (the ShardGroup's scatter
+    path, where the query's shard is fixed and only the replica is
+    chosen)."""
+
+    def __init__(self, workers: list, route: str = "least-in-flight"):
+        self.children = list(workers)
+        self.route = route
+        self._rr = 0
+
+    # -- capacity -----------------------------------------------------------
+    def room(self) -> int:
+        return sum(w.room() for w in self.children)
+
+    def _pick(self):
+        """Next child to feed, honoring credits; None = all backpressured."""
+        if self.route == "round-robin":
+            for off in range(len(self.children)):
+                w = self.children[(self._rr + off) % len(self.children)]
+                if w.room() > 0:
+                    self._rr = (self._rr + off + 1) % len(self.children)
+                    return w
+            return None
+        live = [w for w in self.children if w.room() > 0]
+        if not live:
+            return None
+        return min(live, key=lambda w: (w.in_flight, len(w.buf)))
+
+    # -- intake -------------------------------------------------------------
+    def deal(self, admission: AdmissionController, quantum: int):
+        """Deal queries from the admission queue to children in flush-sized
+        chunks; stops when every child is out of credits (the queries wait
+        upstream — credit-based backpressure)."""
+        q = admission.queue
+        while q:
+            w = self._pick()
+            if w is None:
+                return
+            for _ in range(min(w.room(), quantum, len(q))):
+                w.submit(q.popleft())
+
+    def submit(self, idx: int):
+        """Place one query on a replica (credit-aware; when every child is
+        saturated the least-loaded one buffers it — a ShardGroup parent
+        only scatters while the group has room, so this fallback fires
+        only in legacy eager-scatter mode)."""
+        w = self._pick()
+        if w is None:
+            w = min(self.children, key=lambda c: (c.in_flight, len(c.buf)))
+        w.submit(idx)
+
+    # -- pump / harvest -----------------------------------------------------
+    def pump(self, t: float, drain: bool) -> bool:
+        progress = False
+        for w in self.children:
+            progress |= w.pump(t, drain=drain, block_when_full=False)
+        return progress
+
+    def harvest(self) -> bool:
+        got = False
+        for w in self.children:
+            got |= w.harvest(block=False)
+        return got
+
+    def block_harvest_one(self) -> bool:
+        """Block on the first child with work in flight (the run loop's
+        last resort when no deadline is pending)."""
+        for w in self.children:
+            if w.inflight:
+                w.harvest(block=True)
+                return True
+        return False
+
+    def next_deadline(self) -> float:
+        return min((w.next_deadline() for w in self.children),
+                   default=math.inf)
+
+    def idle(self) -> bool:
+        return all(w.idle() for w in self.children)
+
+    def workers(self):
+        yield from self.children
+
+
+class ShardWorker(EngineWorker):
+    """EngineWorker over one PARTITION of the index. A flush carries the
+    per-query probe rows for this engine's clusters (the scatter payload,
+    consumed by ``engine.search_probed``), and a harvest deposits PARTIAL
+    top-k into the ShardedSink's gather slots instead of final results."""
+
+    def __init__(self, engine, sink: "ShardedSink", *, probes: np.ndarray,
+                 slot: np.ndarray, **kw):
+        super().__init__(engine, sink, **kw)
+        self.probes = probes              # (N, P) local cluster ids, -1 hole
+        self.slot = slot                  # (N,) this shard's gather slot
+
+    def _dispatch(self, take):
+        return self.engine.search_probed(
+            self.sink.q[take], self.probes[take],
+            pad_to=self._bucket_for(len(take)))
+
+    def _finish(self, idxs, res, _t_dispatch):
+        self.sink.finish_partial(idxs, self.slot[idxs],
+                                 np.asarray(res.ids), np.asarray(res.dists))
+
+
+class ShardedSink(StreamSink):
+    """StreamSink plus the gather stage of the sharded tier: a per-query
+    buffer of each owning shard's partial top-k (slot-major), a countdown
+    of outstanding shards, and the queue of fully-gathered queries awaiting
+    the origin's merge rerank."""
+
+    def __init__(self, queries: np.ndarray, arrivals: np.ndarray, k: int,
+                 fanout: int):
+        super().__init__(queries, arrivals, k)
+        n = len(queries)
+        self.k = k
+        self.part_ids = np.full((n, fanout * k), -1, np.int32)
+        self.part_d = np.full((n, fanout * k), np.inf, np.float32)
+        self.pending = np.zeros(n, np.int32)
+        self.ready: deque = deque()       # (idx, gather-complete time)
+
+    def finish_partial(self, idxs: np.ndarray, slots: np.ndarray,
+                       ids: np.ndarray, dists: np.ndarray):
+        cols = slots[:, None] * self.k + np.arange(self.k)
+        self.part_ids[idxs[:, None], cols] = ids
+        self.part_d[idxs[:, None], cols] = dists
+        self.pending[idxs] -= 1
+        t = self.now()
+        for i in idxs[self.pending[idxs] == 0]:
+            self.ready.append((int(i), t))
+
+
+class ShardGroup:
+    """Scatter each dealt query to the children (per-shard ReplicaGroups)
+    owning its probed clusters. With ``backpressure`` every touched child
+    must have room before the query leaves the admission queue (head-of-
+    line FIFO, so deadline shedding upstream stays honest); without it the
+    legacy ShardedFleet eager scatter is reproduced bit-for-bit (children
+    buffer unboundedly, flushes self-limit on engine credits)."""
+
+    def __init__(self, children: list, touches: np.ndarray,
+                 pending: np.ndarray, sink: ShardedSink, k: int,
+                 backpressure: bool):
+        self.children = list(children)
+        self.touches = touches            # (N, O) bool
+        self.pending = pending            # (N,) owners still outstanding
+        self.sink = sink
+        self.backpressure = backpressure
+        self._none_ids = np.full((1, k), -1, np.int32)
+        self._none_d = np.full((1, k), np.inf, np.float32)
+
+    def deal(self, admission: AdmissionController, quantum: int):
+        q = admission.queue
+        while q:
+            idx = q[0]
+            if self.pending[idx] == 0:    # unrouted: completes immediately
+                q.popleft()
+                self.sink.finish(np.asarray([idx]), self._none_ids,
+                                 self._none_d)
+                continue
+            owners = np.nonzero(self.touches[idx])[0]
+            if self.backpressure and any(
+                    self.children[int(o)].room() <= 0 for o in owners):
+                return                    # head waits; deadline may shed it
+            q.popleft()
+            for o in owners:
+                self.children[int(o)].submit(idx)
+
+    def pump(self, t: float, drain: bool) -> bool:
+        progress = False
+        for c in self.children:
+            progress |= c.pump(t, drain)
+        return progress
+
+    def harvest(self) -> bool:
+        got = False
+        for c in self.children:
+            got |= c.harvest()
+        return got
+
+    def block_harvest_one(self) -> bool:
+        for c in self.children:
+            if c.block_harvest_one():
+                return True
+        return False
+
+    def next_deadline(self) -> float:
+        return min((c.next_deadline() for c in self.children),
+                   default=math.inf)
+
+    def idle(self) -> bool:
+        return all(c.idle() for c in self.children)
+
+    def workers(self):
+        for c in self.children:
+            yield from c.workers()
+
+
+# ---------------------------------------------------------------------------
+# the unified topology
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TopologyReport:
+    """Per-stream output of ServingTopology.run — the union of the fleet
+    and sharded reports. Shed queries keep the sink defaults (ids -1,
+    dists inf, latency NaN) and are flagged in ``shed``; percentiles/qps
+    cover admitted queries only (goodput). Replicated-only topologies
+    report fanout 1 and no merges."""
+    ids: np.ndarray          # (N, k) int32, submission order; -1 rows = shed
+    dists: np.ndarray        # (N, k) f32 exact squared distances
+    latency_s: np.ndarray    # (N,) completion - arrival; NaN = shed
+    shed: np.ndarray         # (N,) bool
+    shed_wait_s: np.ndarray  # (N,) queue wait at shed time; NaN = admitted
+    shed_fraction: float
+    qps: float               # admitted queries / makespan (goodput)
+    p50_ms: float
+    p99_ms: float
+    n_queries: int
+    n_admitted: int
+    n_shed: int
+    n_flushes: int
+    flush_sizes: list
+    n_merges: int            # origin gather/merge flushes (sharded only)
+    merge_sizes: list
+    fanout_mean: float       # mean shards scattered to per ADMITTED query
+    n_unrouted: int          # (shed queries never scatter and don't count)
+    per_engine: list         # per-worker dicts: shard/replica/flushes/...
+    makespan_s: float
+    route: str
+    shards: int
+    replicas: list           # replica count per shard group
+    backends: list           # per-shard declared backend (scfg.mode)
+
+
+class ServingTopology:
+    """One admission controller fronting a tree of tier nodes.
+
+    ``groups`` is the topology spec: a list of shard groups, each a list
+    of engine replicas serving that shard's data. One group = a purely
+    replicated tier (arrivals dealt across the replicas, full
+    ``engine.search``); N groups (with ``part_of``/``local_cid``/
+    ``centroids`` describing the cluster partition) = a sharded tier
+    (scatter/gather via ``engine.search_probed`` + origin merge), each
+    shard's arrivals dealt across ITS replicas — the hybrid.
+
+    Admission control, credit-based backpressure, and deadline shedding
+    apply uniformly at the root, whatever the tree shape (this is the
+    point of the refactor: the sharded tier had none of them).
+    ``backpressure=False`` reproduces the legacy ShardedFleet eager
+    scatter for the facade's bit-parity contract."""
+
+    def __init__(self, groups, *, part_of=None, local_cid=None,
+                 centroids=None, route: str = "least-in-flight",
+                 buckets=None, costs: StageCosts | None = None,
+                 fill_threshold: int | None = None,
+                 wait_limit_s: float = 2e-3, fifo_depth: int = 4,
+                 max_batch: int = 64,
+                 admission_depth: int | str | None = "auto",
+                 shed_deadline_s: float | None = None,
+                 backpressure: bool = True):
+        self.groups = [list(g) for g in groups]
+        if not self.groups or any(not g for g in self.groups):
+            raise ValueError("ServingTopology needs at least one engine in "
+                             "every group")
+        if route not in ROUTE_POLICIES:
+            raise ValueError(f"route must be one of {ROUTE_POLICIES}, "
+                             f"got {route!r}")
+        engines = [e for g in self.groups for e in g]
+        ks = {e.scfg.k for e in engines}
+        if len(ks) != 1:
+            raise ValueError(f"engines disagree on k: {sorted(ks)}")
+        self.k = engines[0].scfg.k
+        self.route = route
+        (self.buckets, self.fill_threshold, self.wait_limit_s,
+         self.fifo_depth) = resolve_stream_params(
+            engines[0], buckets, costs, fill_threshold, wait_limit_s,
+            fifo_depth, max_batch)
+        if shed_deadline_s is not None and not shed_deadline_s > 0:
+            raise ValueError(
+                f"shed_deadline_s must be > 0 or None, got {shed_deadline_s}")
+        self.shed_deadline_s = shed_deadline_s
+        if admission_depth == "auto":
+            # default: room for every FIFO to refill once while a full
+            # complement is buffered — deep enough to ride a burst, bounded
+            # so overload surfaces as shedding, not unbounded queue growth
+            admission_depth = 2 * len(engines) * self.fifo_depth \
+                * self.buckets[-1]
+        if admission_depth is not None:
+            admission_depth = int(admission_depth)
+            if admission_depth < 1:
+                raise ValueError(
+                    f"admission_depth must be >= 1, got {admission_depth}")
+        self.admission_depth = admission_depth
+        self.backpressure = bool(backpressure)
+
+        self.sharded = part_of is not None
+        if self.sharded:
+            if local_cid is None or centroids is None:
+                raise ValueError("a sharded topology needs part_of, "
+                                 "local_cid AND centroids")
+            nps = {e.scfg.nprobe for e in engines}
+            if len(nps) != 1:
+                raise ValueError(f"engines disagree on nprobe: {sorted(nps)}")
+            self.nprobe = engines[0].scfg.nprobe
+            self.part_of = np.asarray(part_of, np.int32)
+            self.local_cid = np.asarray(local_cid, np.int32)
+            self.centroids = jnp.asarray(centroids)
+            if not (len(self.part_of) == len(self.local_cid)
+                    == self.centroids.shape[0]):
+                raise ValueError("part_of/local_cid/centroids disagree on "
+                                 "the cluster count")
+            counts = np.bincount(self.part_of, minlength=len(self.groups))
+            for o, g in enumerate(self.groups):
+                if counts[o] != g[0].index.n_clusters:
+                    raise ValueError(
+                        f"engine {o} holds {g[0].index.n_clusters} clusters "
+                        f"but part_of assigns it {counts[o]}")
+                reps = {e.scfg.mode for e in g}
+                if len(reps) != 1:
+                    raise ValueError(f"replicas within shard {o} disagree "
+                                     f"on backend: {sorted(reps)}")
+                if any(e.index.n_clusters != g[0].index.n_clusters
+                       for e in g):
+                    raise ValueError(f"replicas within shard {o} disagree "
+                                     f"on the cluster slice")
+            self.vectors = engines[0].host.vectors
+            self.fanout = max(1, min(self.nprobe, len(self.groups)))
+        else:
+            if len(self.groups) != 1:
+                raise ValueError("multiple groups need a cluster partition "
+                                 "(part_of/local_cid/centroids)")
+            self.part_of = self.local_cid = self.centroids = None
+            self.fanout = 1
+        self.modes = [getattr(g[0].scfg, "mode", "") for g in self.groups]
+
+    # -- warmup ---------------------------------------------------------------
+    def warm(self) -> int:
+        """Pre-compile every executable a run can touch — per engine one
+        padded search (replicated) or probed search (sharded) per bucket
+        shape, plus the origin merge rerank per bucket on sharded
+        topologies — so a timed stream measures serving, not tracing.
+        Replicas sharing a compile cache warm once. Returns the number of
+        engine executables built."""
+        seen: set[int] = set()
+        engines = []
+        for g in self.groups:
+            for e in g:
+                c = id(getattr(e, "_search_cache", e))
+                if c not in seen:
+                    seen.add(c)
+                    engines.append(e)
+        before = sum(e.compile_count for e in engines)
+        for e in engines:
+            q1 = np.zeros((1, e.icfg.dim), np.float32)
+            if self.sharded:
+                probe = np.full((1, self.nprobe), -1, np.int32)
+                probe[0, 0] = 0
+                for b in self.buckets:
+                    res, _ = e.search_probed(q1, probe, pad_to=int(b))
+                    np.asarray(res.ids)
+            else:
+                for b in self.buckets:
+                    res, _ = e.search(q1, pad_to=int(b))
+                    np.asarray(res.ids)
+        if self.sharded:
+            dim = int(self.centroids.shape[1])
+            for b in self.buckets:
+                out = rerank_mod.rerank(
+                    jnp.zeros((b, dim), jnp.float32),
+                    jnp.full((b, self.fanout * self.k), -1, jnp.int32),
+                    self.vectors, k=self.k)
+                np.asarray(out.ids)
+        return sum(e.compile_count for e in engines) - before
+
+    # -- scatter routing ------------------------------------------------------
+    def _route_probes(self, q: np.ndarray, backend):
+        """(1) IVF top-probe selection on the origin, (2) backend match
+        filter, (3) per-owner scatter split. Returns (tables (O, N, P),
+        touches (N, O))."""
+        probe = np.asarray(ivf_mod.cluster_filter(
+            jnp.asarray(q), self.centroids, nprobe=self.nprobe)[0])
+        live = None
+        if backend is not None:
+            req = np.full(len(q), backend, object) \
+                if isinstance(backend, str) \
+                else np.asarray(list(backend), object)
+            if len(req) != len(q):
+                raise ValueError(
+                    f"backend list length {len(req)} != {len(q)} queries")
+            known = set(self.modes)
+            missing = {b for b in req.tolist() if b is not None} - known
+            if missing:
+                raise ValueError(
+                    f"no shard serves backend(s) {sorted(missing)}; this "
+                    f"fleet serves {sorted(known)}")
+            modes = np.asarray(self.modes, object)
+            match_all = np.asarray([b is None for b in req.tolist()])
+            live = (modes[self.part_of[probe]] == req[:, None]) \
+                | match_all[:, None]
+        return ivf_mod.split_probes_by_owner(
+            probe, self.part_of, self.local_cid, len(self.groups),
+            live=live)
+
+    # -- origin gather/merge --------------------------------------------------
+    def _merge(self, sink: ShardedSink, t: float, drain: bool,
+               merge_sizes: list) -> bool:
+        """Merge fully-gathered queries' per-shard partial top-k through the
+        existing sort-based rerank path (exact distances recomputed from the
+        shared host store), flushed in bucket-padded batches like any other
+        stage so merging adds at most len(buckets) executables."""
+        if not sink.ready:
+            return False
+        if not (len(sink.ready) >= self.fill_threshold or drain
+                or t - sink.ready[0][1] >= self.wait_limit_s):
+            return False
+        take = []
+        while sink.ready and len(take) < self.buckets[-1]:
+            take.append(sink.ready.popleft()[0])
+        take = np.asarray(take)
+        nq = len(take)
+        b = next(bb for bb in self.buckets if bb >= nq)
+        qb = np.zeros((b, sink.q.shape[1]), np.float32)
+        qb[:nq] = sink.q[take]
+        cb = np.full((b, sink.part_ids.shape[1]), -1, np.int32)
+        cb[:nq] = sink.part_ids[take]
+        out = rerank_mod.rerank(jnp.asarray(qb), jnp.asarray(cb),
+                                self.vectors, k=self.k)
+        sink.finish(take, np.asarray(out.ids)[:nq], np.asarray(out.dists)[:nq])
+        merge_sizes.append(nq)
+        return True
+
+    # -- per-run tree construction --------------------------------------------
+    def _build_tree(self, sink, tables, slots):
+        stream_kw = dict(buckets=self.buckets,
+                         fill_threshold=self.fill_threshold,
+                         wait_limit_s=self.wait_limit_s,
+                         fifo_depth=self.fifo_depth)
+        if not self.sharded:
+            return ReplicaGroup([EngineWorker(e, sink, **stream_kw)
+                                 for e in self.groups[0]], self.route)
+        children = [
+            ReplicaGroup([ShardWorker(e, sink, probes=tables[o],
+                                      slot=slots[:, o], **stream_kw)
+                          for e in grp], self.route)
+            for o, grp in enumerate(self.groups)]
+        return children
+
+    # -- the run loop ---------------------------------------------------------
+    def run(self, queries, arrival_times=None, backend=None
+            ) -> TopologyReport:
+        """Replay a (possibly timed) stream through the topology; see
+        StreamingScheduler.run for the arrival-replay semantics. ``backend``
+        (None | registry key | per-query sequence of keys/None) restricts
+        each query to shards declaring a matching backend (sharded
+        topologies only)."""
+        q = np.asarray(queries, np.float32)
+        n = len(q)
+        arr = np.zeros(n) if arrival_times is None \
+            else np.asarray(arrival_times, np.float64)
+        order = np.argsort(arr, kind="stable")
+        if self.sharded:
+            tables, touches = self._route_probes(q, backend)
+            slots = np.cumsum(touches, axis=1) - 1
+            pending = touches.sum(axis=1).astype(np.int32)
+            sink = ShardedSink(q, arr, self.k, self.fanout)
+            sink.pending[:] = pending
+            root = ShardGroup(self._build_tree(sink, tables, slots),
+                              touches, pending, sink, self.k,
+                              self.backpressure)
+        else:
+            if backend is not None:
+                raise ValueError("backend routing needs a sharded topology "
+                                 "(shards >= 2); a replicated tier serves "
+                                 "one backend everywhere")
+            pending = None
+            sink = StreamSink(q, arr, self.k)
+            root = self._build_tree(sink, None, None)
+        adm = AdmissionController(self.admission_depth, self.shed_deadline_s,
+                                  arr)
+        shed = np.zeros(n, bool)
+        shed_wait = np.full(n, np.nan)
+        quantum = max(1, min(self.fill_threshold, self.buckets[-1]))
+        merge_sizes: list = []
+        i = 0
+
+        def shed_one(idx: int, wait: float):
+            shed[idx] = True
+            shed_wait[idx] = wait
+
+        while i < n or adm.queue or not root.idle() \
+                or (self.sharded and sink.ready):
+            t = sink.now()
+            # 1. arrivals -> bounded admission queue (overflow sheds now)
+            while i < n and arr[order[i]] <= t:
+                idx = int(order[i])
+                i += 1
+                if not adm.offer(idx):
+                    shed_one(idx, t - arr[idx])
+            # 2. deadline shedding at the head of the queue — checked before
+            # dealing so every dealt query started within its deadline
+            for idx in adm.expire(t):
+                shed_one(idx, t - arr[idx])
+            # 3. deal admitted queries into the tree (credits permitting)
+            root.deal(adm, quantum)
+            # 4. pump + harvest every worker, non-blocking: one slow engine
+            # must not stall its siblings; then merge gathered queries
+            drain = i >= n and not adm.queue
+            progress = root.pump(t, drain)
+            progress |= root.harvest()
+            if self.sharded:
+                progress |= self._merge(sink, t, drain, merge_sizes)
+            if progress:
+                continue
+            # 5. idle: nap until the next arrival / flush / shed / merge
+            # deadline, or block on a device if that is all that's left
+            nxt = arr[order[i]] if i < n else math.inf
+            nxt = min(nxt, root.next_deadline(), adm.next_deadline())
+            if self.sharded and sink.ready:
+                nxt = min(nxt, sink.ready[0][1] + self.wait_limit_s)
+            if not math.isfinite(nxt):
+                if not root.block_harvest_one():
+                    time.sleep(5e-5)      # transient: nothing due anywhere
+                continue
+            # dt <= 0 means a deadline already passed but the tree is out
+            # of credits — nap briefly instead of spinning until a device
+            # frees a slot
+            dt = nxt - sink.now()
+            time.sleep(min(max(dt, 5e-5), 5e-4))
+        makespan = sink.now()
+        run_groups = [list(c.children) for c in root.children] \
+            if self.sharded else [list(root.children)]
+        return self._report(sink, shed, shed_wait, pending, merge_sizes,
+                            makespan, n, run_groups)
+
+    # -- reporting ------------------------------------------------------------
+    def _report(self, sink, shed, shed_wait, pending, merge_sizes,
+                makespan: float, n: int, run_groups: list) -> TopologyReport:
+        n_shed = int(shed.sum())
+        n_admitted = n - n_shed
+        flush_sizes = [s for grp in run_groups for w in grp
+                       for s in w.flush_sizes]
+        per_engine = []
+        seen_caches: set[int] = set()
+        j = 0
+        for o, grp_workers in enumerate(run_groups):
+            for r, w in enumerate(grp_workers):
+                # replicas built with share_executables share one compile
+                # cache; attribute its compiles to the first worker on that
+                # cache so summing per-engine compiles counts each
+                # executable once
+                cache = id(getattr(w.engine, "_search_cache", w.engine))
+                per_engine.append({
+                    "engine": j, "shard": o, "replica": r,
+                    "backend": self.modes[o],
+                    "flushes": len(w.flush_sizes),
+                    "queries": int(sum(w.flush_sizes)),
+                    "max_in_flight": w.max_in_flight,
+                    "compiles": w.compiles
+                    if cache not in seen_caches else 0,
+                    "clusters": int(w.engine.index.n_clusters)
+                    if self.sharded else None})
+                seen_caches.add(cache)
+                j += 1
+        return TopologyReport(
+            ids=sink.out_ids, dists=sink.out_d, latency_s=sink.lat,
+            shed=shed, shed_wait_s=shed_wait,
+            shed_fraction=n_shed / n if n else 0.0,
+            qps=n_admitted / makespan if makespan > 0 else 0.0,
+            p50_ms=percentile_ms(sink.lat, 50),
+            p99_ms=percentile_ms(sink.lat, 99),
+            n_queries=n, n_admitted=n_admitted, n_shed=n_shed,
+            n_flushes=len(flush_sizes), flush_sizes=flush_sizes,
+            n_merges=len(merge_sizes), merge_sizes=merge_sizes,
+            # shed queries never reached the scatter stage: fanout is the
+            # mean over queries actually dealt (== the legacy all-queries
+            # mean whenever nothing sheds)
+            fanout_mean=float(pending[~shed].mean())
+            if pending is not None and n_admitted else
+            (1.0 if n_admitted else 0.0),
+            n_unrouted=int((pending[~shed] == 0).sum())
+            if pending is not None else 0,
+            per_engine=per_engine, makespan_s=makespan, route=self.route,
+            shards=len(self.groups) if self.sharded else 1,
+            replicas=[len(g) for g in self.groups],
+            backends=list(self.modes))
+
+
+def topology(eng, *, shards: int = 1, replicas: int = 1,
+             mem_budget: int | None = None, strict: bool = False,
+             modes=None, inner_shards: int = 1,
+             freq: np.ndarray | None = None,
+             share_executables: bool = True, **kw) -> ServingTopology:
+    """Build a serving topology over one built engine: ``shards`` disjoint
+    cluster partitions (capacity), each replicated ``replicas`` ways
+    (throughput), behind tier-wide admission control.
+
+    shards=1 replicates the whole index (the FleetScheduler shape);
+    replicas=1 with shards=N is the pure sharded tier (ShardedFleet
+    shape); both > 1 is the hybrid — partition for memory, replicate each
+    partition for load, with shedding/backpressure/heterogeneous routing
+    (``modes``, one backend per shard) working uniformly.
+
+    ``mem_budget``/``strict``/``freq``/``inner_shards`` flow to the
+    cluster partitioning (see ``partition_index``); every other keyword
+    flows to ``ServingTopology`` (route, buckets, fill_threshold,
+    wait_limit_s, fifo_depth, admission_depth, shed_deadline_s,
+    backpressure, ...)."""
+    if replicas < 1:
+        raise ValueError(f"need at least one replica, got {replicas}")
+    if shards < 1:
+        raise ValueError(f"need at least one shard, got {shards}")
+    if shards == 1:
+        if modes is not None:
+            raise ValueError("modes (per-shard backends) needs shards >= 2")
+        return ServingTopology(
+            [replicate_engine(eng, replicas,
+                              share_executables=share_executables)], **kw)
+    parts, pl = partition_index(eng, shards, mem_budget=mem_budget,
+                                strict=strict, modes=modes,
+                                inner_shards=inner_shards, freq=freq)
+    groups = [replicate_engine(p, replicas,
+                               share_executables=share_executables)
+              for p in parts]
+    return ServingTopology(groups, part_of=pl.shard_of,
+                           local_cid=pl.local_slot,
+                           centroids=eng.index.centroids, **kw)

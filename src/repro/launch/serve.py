@@ -22,11 +22,16 @@ deadline load shedding — the multi-engine serving tier in its
 production position.
 
 --fleet N --sharded PARTITIONS the index instead of replicating it:
-partition_engine splits the clusters across N engines (disjoint slices,
-~1/N memory each) and the ShardedFleet scatters each decode-step query
-to the <= nprobe engines owning its probed clusters, gathering and
-merging partial top-k on the origin — the paper's Fig 18 multi-node
-serving shape under the RAG loop.
+the serving topology (core/topology.py) splits the clusters across N
+engines (disjoint slices, ~1/N memory each) and scatters each
+decode-step query to the <= nprobe engines owning its probed clusters,
+gathering and merging partial top-k on the origin — the paper's Fig 18
+multi-node serving shape under the RAG loop. Adding --replicas R
+replicates EACH partition R ways (the hybrid tier: partition for
+capacity, replicate for throughput), with tier-wide admission control.
+
+--sharded / --replicas without --fleet >= 2 is an argument ERROR, not a
+silent single-engine run.
 """
 
 from __future__ import annotations
@@ -41,7 +46,7 @@ import numpy as np
 
 from ..configs import get_smoke
 from ..core import compact_index, engine
-from ..core.fleet import FleetScheduler, partition_engine, replicate_engine
+from ..core.fleet import FleetScheduler, replicate_engine, topology
 from ..core.pipeline import StreamingScheduler, bucket_ladder
 from ..data.synthetic import clustered_vectors
 from ..models.model import build_model
@@ -102,7 +107,20 @@ ENCODERS: dict[str, Callable[..., QueryEncoder]] = {
 def run(arch: str, requests: int, prompt_len: int, gen: int,
         rag: bool = False, seed: int = 0, verbose: bool = True,
         query_encoder: QueryEncoder | str | None = None, fleet: int = 1,
-        sharded: bool = False):
+        sharded: bool = False, replicas: int = 1):
+    # flag-consistency first: these used to be SILENTLY ignored, burning a
+    # debugging session on a "sharded" run that never sharded anything
+    if sharded and fleet < 2:
+        raise ValueError(
+            f"--sharded partitions the index across the fleet and needs "
+            f"--fleet >= 2 (got --fleet {fleet}); a single engine has "
+            f"nothing to partition")
+    if replicas > 1 and not sharded:
+        raise ValueError(
+            f"--replicas {replicas} replicates each PARTITION and needs "
+            f"--sharded; for plain replication use --fleet N alone")
+    if replicas < 1:
+        raise ValueError(f"--replicas must be >= 1, got {replicas}")
     cfg = get_smoke(arch)
     model = build_model(cfg)
     key = jax.random.PRNGKey(seed)
@@ -116,11 +134,14 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
         scfg = engine.SearchConfig(nprobe=2, ef=16, k=4)
         eng = engine.PIMCQGEngine.build(key, x, icfg, scfg, n_shards=2)
         if fleet > 1 and sharded:
-            # partitioned tier: each of `fleet` engines owns a disjoint
-            # cluster slice; queries scatter to the owners of their probed
-            # clusters and partial top-k gathers on the origin
-            scheduler = partition_engine(
-                eng, fleet, buckets=bucket_ladder(max(requests, 1)),
+            # partitioned tier (x replicas = the hybrid): each of `fleet`
+            # shard groups owns a disjoint cluster slice served by
+            # `replicas` engine replicas; queries scatter to the owners of
+            # their probed clusters, partial top-k gathers on the origin,
+            # and admission control applies tier-wide
+            scheduler = topology(
+                eng, shards=fleet, replicas=replicas,
+                buckets=bucket_ladder(max(requests, 1)),
                 fill_threshold=max(requests // 2, 1), wait_limit_s=5e-3)
         elif fleet > 1:
             # multi-engine tier: shard the decode-step query stream across
@@ -174,12 +195,13 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
             if fleet > 1 and sharded:
                 shares = [d["queries"] for d in rag_report.per_engine]
                 sizes = [d["clusters"] for d in rag_report.per_engine]
-                print(f"[serve] rag: sharded fleet={fleet} "
+                print(f"[serve] rag: sharded fleet={fleet}x{replicas} "
                       f"clusters/engine={sizes} "
                       f"fanout={rag_report.fanout_mean:.2f} "
                       f"scatter flushes={rag_report.n_flushes} "
                       f"merges={rag_report.n_merges} "
                       f"per-engine queries={shares} "
+                      f"shed={rag_report.shed_fraction:.2f} "
                       f"p50={rag_report.p50_ms:.1f}ms")
             elif fleet > 1:
                 shares = [d["queries"] for d in rag_report.per_engine]
@@ -215,9 +237,23 @@ def main():
                     help="with --fleet N: PARTITION the index across the N "
                          "engines (disjoint cluster slices, scatter/gather "
                          "routing) instead of replicating it")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="with --fleet N --sharded: replicate EACH "
+                         "partition this many ways (the hybrid tier; "
+                         "default 1)")
     args = ap.parse_args()
+    # surface flag misuse as an argparse error (exit 2 + usage), not a
+    # silently different topology
+    if args.sharded and args.fleet < 2:
+        ap.error(f"--sharded needs --fleet >= 2 (got --fleet {args.fleet})")
+    if args.replicas > 1 and not args.sharded:
+        ap.error("--replicas needs --sharded (plain replication is "
+                 "--fleet N alone)")
+    if args.replicas < 1:
+        ap.error(f"--replicas must be >= 1, got {args.replicas}")
     run(args.arch, args.requests, args.prompt_len, args.gen, args.rag,
-        query_encoder=args.encoder, fleet=args.fleet, sharded=args.sharded)
+        query_encoder=args.encoder, fleet=args.fleet, sharded=args.sharded,
+        replicas=args.replicas)
 
 
 if __name__ == "__main__":

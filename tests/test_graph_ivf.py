@@ -3,6 +3,7 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.core import graph, ivf
 
@@ -73,3 +74,94 @@ def test_graph_greedy_reachability(rng):
         true10 = set(np.argsort(((xs - q) ** 2).sum(1))[:10])
         hits += best in true10 or best == true
     assert hits >= 17, hits
+
+
+# ---------------------------------------------------------------------------
+# split_probes_by_owner: the sharded tier's scatter split (ISSUE 5
+# property test — hypothesis when installed, a seeded grid otherwise)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _random_split_case(seed, n_clusters, n_owners, q, p, with_live,
+                       with_holes):
+    rng = np.random.default_rng(seed)
+    owner_of = rng.integers(0, n_owners, n_clusters)
+    # a consistent local id map: local ids are dense per owner
+    local_cid = np.zeros(n_clusters, np.int64)
+    for o in range(n_owners):
+        members = np.nonzero(owner_of == o)[0]
+        local_cid[members] = np.arange(len(members))
+    probe = rng.integers(0, n_clusters, (q, p))
+    if with_holes:
+        probe[rng.random((q, p)) < 0.3] = -1
+    live = rng.random((q, p)) < 0.7 if with_live else None
+    return probe, owner_of, local_cid, live
+
+
+def _check_split_partitions_exactly(probe, owner_of, local_cid, n_owners,
+                                    live):
+    tables, touches = ivf.split_probes_by_owner(probe, owner_of, local_cid,
+                                                n_owners, live=live)
+    q, p = probe.shape
+    assert tables.shape == (n_owners, q, p)
+    assert touches.shape == (q, n_owners)
+    hole = probe < 0
+    eff = ~hole if live is None else (~hole & live)
+    safe = np.where(hole, 0, probe)
+    # each live probe lands on EXACTLY its owner, at the owner's local id;
+    # holes and masked probes are -1 for every owner (no -1 wraparound)
+    for o in range(n_owners):
+        expect = np.where(eff & (owner_of[safe] == o), local_cid[safe], -1)
+        np.testing.assert_array_equal(tables[o], expect)
+    # partition: no probe duplicated or dropped across owners
+    np.testing.assert_array_equal((tables >= 0).sum(axis=0),
+                                  eff.astype(np.int64))
+    # touches is the per-owner any() of the tables
+    np.testing.assert_array_equal(touches, (tables >= 0).any(axis=2).T)
+
+
+_SPLIT_GRID = [(seed, c, o, qn, p, lv, hl)
+               for seed in (0, 1, 2)
+               for c, o in [(8, 2), (12, 4), (24, 3)]
+               for qn, p in [(5, 2), (9, 4)]
+               for lv in (False, True)
+               for hl in (False, True)]
+
+
+@pytest.mark.parametrize("seed,c,o,q,p,live,holes", _SPLIT_GRID)
+def test_split_probes_by_owner_partitions_exactly(seed, c, o, q, p, live,
+                                                  holes):
+    probe, owner_of, local_cid, lv = _random_split_case(seed, c, o, q, p,
+                                                        live, holes)
+    _check_split_partitions_exactly(probe, owner_of, local_cid, o, lv)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           co=st.sampled_from([(8, 2), (12, 4), (24, 3), (16, 16)]),
+           qp=st.sampled_from([(1, 1), (5, 2), (9, 4)]),
+           live=st.booleans(), holes=st.booleans())
+    def test_split_probes_by_owner_partitions_exactly_hypothesis(
+            seed, co, qp, live, holes):
+        c, o = co
+        q, p = qp
+        probe, owner_of, local_cid, lv = _random_split_case(
+            seed, c, o, q, p, live, holes)
+        _check_split_partitions_exactly(probe, owner_of, local_cid, o, lv)
+
+
+def test_split_probes_all_hole_row_touches_nobody():
+    owner_of = np.array([0, 0, 1, 1])
+    local_cid = np.array([0, 1, 0, 1])
+    probe = np.array([[-1, -1], [2, -1]])
+    tables, touches = ivf.split_probes_by_owner(probe, owner_of, local_cid, 2)
+    assert (tables[:, 0, :] == -1).all()
+    assert not touches[0].any()
+    np.testing.assert_array_equal(touches[1], [False, True])

@@ -58,3 +58,16 @@ def test_serve_loop_with_rag():
                           gen=4, rag=True, verbose=False)
     assert toks.shape == (2, 4)
     assert retrieved is not None and retrieved.shape[0] == 2
+
+
+def test_serve_rejects_inconsistent_topology_flags():
+    """--sharded / --replicas with --fleet 1 used to be SILENTLY ignored
+    (ISSUE 5 satellite): now they raise before any model is built."""
+    from repro.launch.serve import run
+    with pytest.raises(ValueError, match="--fleet >= 2"):
+        run("h2o-danube-1.8b", 2, 16, 4, rag=True, fleet=1, sharded=True)
+    with pytest.raises(ValueError, match="--sharded"):
+        run("h2o-danube-1.8b", 2, 16, 4, rag=True, fleet=2, replicas=2)
+    with pytest.raises(ValueError, match="--replicas"):
+        run("h2o-danube-1.8b", 2, 16, 4, rag=True, fleet=2, sharded=True,
+            replicas=0)
