@@ -66,6 +66,15 @@ def main() -> None:
     if args.smoke:
         # must be set BEFORE benchmarks.common is imported by any module
         os.environ["BENCH_SMOKE"] = "1"
+    # fig18's mesh-backend rows and all_gather calibration need a
+    # multi-device host; force 8 virtual CPU devices BEFORE the first jax
+    # import (single-device modules are unaffected — their arrays stay on
+    # device 0). Respect a caller who already forced a count.
+    if "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8").strip()
     if args.out_dir:
         os.makedirs(args.out_dir, exist_ok=True)
 

@@ -141,7 +141,9 @@ def partition_engine(eng, n_parts: int, *, mem_budget: int | None = None,
     ``mem_budget`` and per-partition ``modes``).
 
     Extra keyword args flow to the ShardedFleet stream parameters
-    (buckets, fill_threshold, wait_limit_s, fifo_depth, ...). For the same
+    (buckets, fill_threshold, wait_limit_s, fifo_depth, ...) including
+    ``exec="mesh"`` to run the scatter/gather as device-mesh collectives
+    (see ``core.execbackend``). For the same
     partitioning with tier-wide admission control / shedding / per-shard
     replication, build it via ``topology(eng, shards=N, replicas=R, ...)``
     instead."""
@@ -209,7 +211,7 @@ class ShardedFleet:
                  buckets=None, costs: StageCosts | None = None,
                  fill_threshold: int | None = None,
                  wait_limit_s: float = 2e-3, fifo_depth: int = 4,
-                 max_batch: int = 64):
+                 max_batch: int = 64, exec: str = "inproc"):
         if not engines:
             raise ValueError("ShardedFleet needs at least one engine")
         self._topo = ServingTopology(
@@ -217,7 +219,8 @@ class ShardedFleet:
             centroids=centroids, buckets=buckets, costs=costs,
             fill_threshold=fill_threshold, wait_limit_s=wait_limit_s,
             fifo_depth=fifo_depth, max_batch=max_batch,
-            admission_depth=None, shed_deadline_s=None, backpressure=False)
+            admission_depth=None, shed_deadline_s=None, backpressure=False,
+            exec=exec)
         self.engines = list(engines)
         self.part_of = self._topo.part_of
         self.local_cid = self._topo.local_cid

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["KMeansResult", "kmeans", "assign", "cluster_filter",
-           "bincount_sizes", "split_probes_by_owner"]
+           "bincount_sizes", "split_probes_by_owner", "owner_split_op"]
 
 
 class KMeansResult(NamedTuple):
@@ -103,6 +103,27 @@ def cluster_filter(queries: jax.Array, centroids: jax.Array, *, nprobe: int):
 
 def bincount_sizes(assignment: np.ndarray, k: int) -> np.ndarray:
     return np.bincount(assignment, minlength=k).astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_owners",))
+def owner_split_op(probe_cids: jax.Array, owner_of: jax.Array,
+                   local_cid: jax.Array, live: jax.Array,
+                   *, n_owners: int) -> tuple[jax.Array, jax.Array]:
+    """Lowerable (jit / shard_map-composable) core of
+    :func:`split_probes_by_owner` — the same owner split as one broadcast
+    compare instead of a per-owner host loop, so the scatter router can run
+    inside a device-mesh execution step. ``live`` (Q, P) bool masks probes
+    (pass all-True for no masking); semantics otherwise identical to the
+    numpy wrapper: tables (O, Q, P) int32 local cluster ids with -1 holes,
+    touches (Q, O) bool."""
+    hole = probe_cids < 0
+    safe = jnp.where(hole, 0, probe_cids)                  # avoid -1 wrap
+    own = jnp.where(hole | ~live, -1, owner_of[safe])      # (Q, P)
+    local = jnp.where(own >= 0, local_cid[safe], -1)
+    owners = jnp.arange(n_owners, dtype=own.dtype)[:, None, None]
+    tables = jnp.where(own[None] == owners, local[None], -1).astype(jnp.int32)
+    touches = (tables >= 0).any(axis=2).T                  # (Q, O)
+    return tables, touches
 
 
 def split_probes_by_owner(probe_cids: np.ndarray, owner_of: np.ndarray,

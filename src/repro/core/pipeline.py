@@ -186,6 +186,10 @@ class SimReport:
     n_shed: int = 0           # queries dropped by the shedding policy
     shed_fraction: float = 0.0  # n_shed / offered
     n_retries: int = 0        # shed batches re-offered by the retry policy
+    p99_latency_s: float = float("nan")  # per-query p99 (batch latency
+                                         # weighted by batch size)
+    n_reissued: int = 0       # hedged speculative re-dispatches (search)
+    n_duplicate_drops: int = 0  # hedged completions that lost the race
 
 
 class EventSimulator:
@@ -218,7 +222,8 @@ class EventSimulator:
     # own FIFO; stages of different batches overlap freely — this is exactly
     # the concurrency structure of Fig 8 (async pipeline).
     def _run_batches(self, batches, shed_deadline_s: float | None = None,
-                     retry: RetryPolicy | None = None):
+                     retry: RetryPolicy | None = None,
+                     pu_speed=None, hedge=None, hedge_groups=None):
         """batches: list of (pu, n_queries, ready_time); returns SimReport.
 
         With ``shed_deadline_s`` set, a batch whose host prep could not
@@ -228,8 +233,31 @@ class EventSimulator:
         latency without bound. With ``retry`` also set, a shed batch is
         re-offered ``backoff_s`` after its deadline expired (a fresh
         arrival with a fresh deadline) until ``max_attempts`` offers are
-        exhausted — the shed-aware client model."""
+        exhausted — the shed-aware client model.
+
+        ``pu_speed`` (P,) multiplies each PU's search-stage duration (a
+        straggler PU is speed > 1). ``hedge`` — a
+        ``distributed.straggler.DeadlineReissue`` — enables hedged dispatch
+        at the search stage: a batch whose search would finish past
+        ``k x EWMA`` of its dispatch is speculatively re-run, AT the
+        deadline instant, on the least-loaded other PU in its
+        ``hedge_groups`` replica set (default: all PUs are mutual
+        replicas); the earlier finish wins and the later completion is
+        dropped as a duplicate. The policy object is driven with the
+        SIMULATED clock (its ``clock`` attribute is rebound here), so the
+        same class governs real wall-clock serving and deterministic
+        simulation."""
         c = self.costs
+        speed = np.ones(self.n_pus) if pu_speed is None \
+            else np.asarray(pu_speed, np.float64)
+        if hedge is not None:
+            sim_now = [0.0]
+            hedge.clock = lambda: sim_now[0]
+        group_of = {}
+        if hedge_groups is not None:
+            for grp in hedge_groups:
+                for pu in grp:
+                    group_of[int(pu)] = tuple(int(a) for a in grp)
         nres_in = "link"
         nres_out = "link_out" if self.full_duplex else "link"
         free = {"prep": 0.0, "link": 0.0, "link_out": 0.0}
@@ -305,8 +333,43 @@ class EventSimulator:
                 start = max(ready, free[nres_in]); free[nres_in] = start + duration(1, pu, n)
                 tdone = free[nres_in]
             elif stage == 2:
-                start = max(ready, free_pu[pu]); free_pu[pu] = start + duration(2, pu, n)
-                tdone = free_pu[pu]
+                start = max(ready, free_pu[pu])
+                t_primary = start + duration(2, pu, n) * speed[pu]
+                free_pu[pu] = t_primary
+                tdone = t_primary
+                if hedge is not None:
+                    # drive the real DeadlineReissue on the simulated clock:
+                    # dispatch at ready, poll at the deadline instant; the
+                    # whole race resolves in closed form (both finish times
+                    # are known), so the outcome is deterministic
+                    sim_now[0] = ready
+                    hedge.dispatch(("batch", i))
+                    fired = False
+                    if hedge.tracker.value is not None:
+                        t_deadline = ready + hedge.k * hedge.tracker.value
+                        if t_primary > t_deadline:
+                            sim_now[0] = t_deadline
+                            fired = ("batch", i) in hedge.poll()
+                    if fired:
+                        alts = [a for a in group_of.get(pu, range(self.n_pus))
+                                if a != pu]
+                        alt = min(alts, key=lambda a: free_pu[a]) \
+                            if alts else None
+                    if fired and alt is not None:
+                        start_a = max(t_deadline, free_pu[alt])
+                        t_alt = start_a + duration(2, alt, n) * speed[alt]
+                        free_pu[alt] = t_alt
+                        busy["search"] += (t_primary - start) \
+                            + (t_alt - start_a)
+                        tdone = min(t_primary, t_alt)
+                        sim_now[0] = tdone
+                        hedge.complete(("batch", i))      # first response wins
+                        sim_now[0] = max(t_primary, t_alt)
+                        hedge.complete(("batch", i))      # duplicate dropped
+                        start = tdone   # busy already accounted above
+                    else:
+                        sim_now[0] = t_primary
+                        hedge.complete(("batch", i))
             elif stage == 3:
                 start = max(ready, free[nres_out]); free[nres_out] = start + duration(3, pu, n)
                 tdone = free[nres_out]
@@ -330,6 +393,9 @@ class EventSimulator:
         assert nq + n_shed == offered, "simulator lost batches in flight"
         lat = float(np.mean([done_t[i] - batches[i][2] for i in done_t])) \
             if done_t else float("nan")     # nothing completed: NaN, not 0
+        per_q_lat = np.repeat(
+            [done_t[i] - batches[i][2] for i in done_t],
+            [batches[i][1] for i in done_t]) if done_t else np.empty(0)
         return SimReport(qps=nq / end if end > 0 else 0.0,
                          mean_latency_s=lat,
                          stage_busy={k: v / end for k, v in busy.items()}
@@ -337,7 +403,13 @@ class EventSimulator:
                          stage_time=dict(busy), makespan_s=end, n_queries=nq,
                          n_shed=n_shed,
                          shed_fraction=n_shed / offered if offered else 0.0,
-                         n_retries=n_retries)
+                         n_retries=n_retries,
+                         p99_latency_s=float(np.percentile(per_q_lat, 99))
+                         if per_q_lat.size else float("nan"),
+                         n_reissued=hedge.reissued_total
+                         if hedge is not None else 0,
+                         n_duplicate_drops=hedge.duplicate_results
+                         if hedge is not None else 0)
 
     # -- policies -------------------------------------------------------------
     def per_query(self, n_queries: int, pu_of_query=None) -> SimReport:
@@ -376,12 +448,19 @@ class EventSimulator:
                          stage_busy={k: v / t for k, v in busy.items()},
                          stage_time=dict(busy), makespan_s=t, n_queries=nq)
 
-    def pipeline(self, n_queries: int, minibatch: int, pu_of_query=None
+    def pipeline(self, n_queries: int, minibatch: int, pu_of_query=None,
+                 *, pu_speed=None, hedge=None, hedge_groups=None
                  ) -> SimReport:
+        """Fixed-mini-batch async pipeline. ``pu_speed``/``hedge``/
+        ``hedge_groups`` inject per-PU stragglers and the hedged-dispatch
+        policy (see ``_run_batches``) — the deterministic harness for the
+        serving tier's speculative re-dispatch claims."""
         pus = pu_of_query if pu_of_query is not None \
             else np.arange(n_queries) % self.n_pus
         # round-robin interleave across PUs to mimic arrival order
-        return self._run_batches(round_robin_batches(pus, minibatch))
+        return self._run_batches(round_robin_batches(pus, minibatch),
+                                 pu_speed=pu_speed, hedge=hedge,
+                                 hedge_groups=hedge_groups)
 
     def dynamic(self, arrival_times: np.ndarray, pu_of_query: np.ndarray,
                 threshold: int, wait_limit_s: float,
@@ -510,9 +589,14 @@ class EngineWorker:
     """
 
     def __init__(self, engine, sink: StreamSink, *, buckets: tuple[int, ...],
-                 fill_threshold: int, wait_limit_s: float, fifo_depth: int):
+                 fill_threshold: int, wait_limit_s: float, fifo_depth: int,
+                 exec_backend=None):
         self.engine = engine
         self.sink = sink
+        if exec_backend is None:
+            from .execbackend import INPROC
+            exec_backend = INPROC
+        self.exec = exec_backend            # ExecutionBackend (where flushes run)
         self.buckets = buckets
         self.max_bucket = buckets[-1]
         self.fill_threshold = fill_threshold
@@ -563,7 +647,8 @@ class EngineWorker:
         ShardWorker) override this to attach per-query payloads such as
         probe tables to the same flush."""
         q = self.sink.q[take]
-        return self.engine.search(q, pad_to=self._bucket_for(len(q)))
+        return self.exec.search(self.engine, q,
+                                pad_to=self._bucket_for(len(q)))
 
     @staticmethod
     def _ready(res) -> bool:

@@ -52,14 +52,17 @@ import numpy as np
 
 from . import compact_index as compact_index_mod
 from . import engine as engine_mod
+from . import execbackend as execbackend_mod
 from . import ivf as ivf_mod
 from . import placement as placement_mod
 from . import rerank as rerank_mod
 from .pipeline import (EngineWorker, StageCosts, StreamSink, percentile_ms,
                        resolve_stream_params)
+from ..distributed.straggler import DeadlineReissue, HedgeConfig
 
 __all__ = ["AdmissionController", "ReplicaGroup", "ShardGroup",
            "ShardWorker", "ShardedSink", "ServingTopology", "TopologyReport",
+           "MeshShardWorker", "MeshShardGroup", "ShardHedge",
            "replicate_engine", "partition_index", "topology"]
 
 ROUTE_POLICIES = ("round-robin", "least-in-flight")
@@ -291,24 +294,114 @@ class ReplicaGroup:
         yield from self.children
 
 
+class ShardHedge:
+    """Per-run hedged-dispatch state for a sharded tier: one
+    ``DeadlineReissue`` per shard (flush latency is a property of the
+    shard's data slice, so each shard tracks its own EWMA), plus the
+    registries mapping a flush's batch id to its shard/queries and a lazy
+    result object back to its batch id (content-addressing, so the FIRST
+    materialized response — original or speculative duplicate — wins and
+    the loser is dropped before it ever touches the gather slots)."""
+
+    def __init__(self, cfg: HedgeConfig, n_shards: int, clock):
+        from ..distributed.straggler import EwmaTracker
+        self.cfg = cfg
+        self.per_shard = [
+            DeadlineReissue(k=cfg.k, max_reissue=cfg.max_reissue,
+                            clock=clock,
+                            tracker=EwmaTracker(alpha=cfg.alpha))
+            for _ in range(n_shards)]
+        self.flights: dict = {}           # bid -> (shard, query idxs, origin)
+        self._by_res: dict = {}           # id(lazy result) -> bid
+        self._next_bid = 0
+
+    def register(self, shard: int, idxs, res, origin=None) -> int:
+        """Record a primary flush dispatch; returns its batch id. ``origin``
+        (the dispatching worker) is excluded when picking the reissue
+        target — the straggler must never hedge onto itself."""
+        bid = self._next_bid
+        self._next_bid += 1
+        self.flights[bid] = (shard, np.asarray(idxs), origin)
+        self.per_shard[shard].dispatch(bid)
+        self._by_res[id(res)] = bid
+        return bid
+
+    def bind(self, res, bid: int):
+        """Associate a speculative duplicate's lazy result with the flush."""
+        self._by_res[id(res)] = bid
+
+    def complete(self, res, shard: int) -> bool:
+        """First completion wins; False = duplicate, drop the deposit."""
+        bid = self._by_res.pop(id(res), None)
+        if bid is None:
+            return True                   # unhedged flush (defensive)
+        first = self.per_shard[shard].complete(bid)
+        if first:
+            self.flights.pop(bid, None)
+        return first
+
+    # -- accounting (TopologyReport) ----------------------------------------
+    @property
+    def n_reissued(self) -> int:
+        return sum(dr.reissued_total for dr in self.per_shard)
+
+    @property
+    def n_duplicate_drops(self) -> int:
+        return sum(dr.duplicate_results for dr in self.per_shard)
+
+    @property
+    def shard_ewma_ms(self) -> list:
+        return [float("nan") if dr.tracker.value is None
+                else dr.tracker.value * 1e3 for dr in self.per_shard]
+
+
 class ShardWorker(EngineWorker):
     """EngineWorker over one PARTITION of the index. A flush carries the
     per-query probe rows for this engine's clusters (the scatter payload,
     consumed by ``engine.search_probed``), and a harvest deposits PARTIAL
-    top-k into the ShardedSink's gather slots instead of final results."""
+    top-k into the ShardedSink's gather slots instead of final results.
+
+    With ``hedge`` set (a per-run ShardHedge), every primary flush is
+    registered for deadline tracking, ``hedge_dispatch`` re-runs an
+    overdue flush speculatively (bypassing the buffer — the queries are
+    already in flight elsewhere), and ``_finish`` drops the loser of each
+    race before it deposits."""
 
     def __init__(self, engine, sink: "ShardedSink", *, probes: np.ndarray,
-                 slot: np.ndarray, **kw):
+                 slot: np.ndarray, shard: int = 0,
+                 hedge: ShardHedge | None = None, **kw):
         super().__init__(engine, sink, **kw)
         self.probes = probes              # (N, P) local cluster ids, -1 hole
         self.slot = slot                  # (N,) this shard's gather slot
+        self.shard = shard
+        self.hedge = hedge
+        self.n_hedged = 0                 # speculative flushes run HERE
 
     def _dispatch(self, take):
-        return self.engine.search_probed(
-            self.sink.q[take], self.probes[take],
+        out = self.exec.search_probed(
+            self.engine, self.sink.q[take], self.probes[take],
             pad_to=self._bucket_for(len(take)))
+        if self.hedge is not None:
+            self.hedge.register(self.shard, take, out[0], origin=self)
+        return out
+
+    def hedge_dispatch(self, idxs: np.ndarray, bid: int, t: float):
+        """Speculatively re-run an overdue flush on THIS replica. Enters
+        the in-flight FIFO directly (no buffer, no credit check: the
+        queries were already admitted and dealt — hedging trades bounded
+        duplicate work, capped by max_reissue, for tail latency)."""
+        res, _ = self.exec.search_probed(
+            self.engine, self.sink.q[idxs], self.probes[idxs],
+            pad_to=self._bucket_for(len(idxs)))
+        self.hedge.bind(res, bid)
+        self.inflight.append((np.asarray(idxs), res, t))
+        self.max_in_flight = max(self.max_in_flight, len(self.inflight))
+        self.n_hedged += 1
 
     def _finish(self, idxs, res, _t_dispatch):
+        if self.hedge is not None \
+                and not self.hedge.complete(res, self.shard):
+            return                        # lost the race: drop, don't deposit
         self.sink.finish_partial(idxs, self.slot[idxs],
                                  np.asarray(res.ids), np.asarray(res.dists))
 
@@ -350,14 +443,35 @@ class ShardGroup:
 
     def __init__(self, children: list, touches: np.ndarray,
                  pending: np.ndarray, sink: ShardedSink, k: int,
-                 backpressure: bool):
+                 backpressure: bool, hedge: ShardHedge | None = None):
         self.children = list(children)
         self.touches = touches            # (N, O) bool
         self.pending = pending            # (N,) owners still outstanding
         self.sink = sink
         self.backpressure = backpressure
+        self.hedge = hedge
         self._none_ids = np.full((1, k), -1, np.int32)
         self._none_d = np.full((1, k), np.inf, np.float32)
+
+    def hedge_poll(self, t: float) -> bool:
+        """Reissue overdue flushes: each shard's DeadlineReissue nominates
+        batches past k x EWMA; each is speculatively re-dispatched on the
+        LEAST-LOADED replica of that shard (first response wins, the loser
+        is dropped at harvest — see ShardWorker._finish)."""
+        if self.hedge is None:
+            return False
+        did = False
+        for dr in self.hedge.per_shard:
+            for bid in dr.poll():
+                shard, idxs, origin = self.hedge.flights[bid]
+                alts = [c for c in self.children[shard].children
+                        if c is not origin]
+                if not alts:
+                    continue              # single replica: nowhere to hedge
+                w = min(alts, key=lambda c: (c.in_flight, len(c.buf)))
+                w.hedge_dispatch(idxs, bid, t)
+                did = True
+        return did
 
     def deal(self, admission: AdmissionController, quantum: int):
         q = admission.queue
@@ -377,7 +491,7 @@ class ShardGroup:
                 self.children[int(o)].submit(idx)
 
     def pump(self, t: float, drain: bool) -> bool:
-        progress = False
+        progress = self.hedge_poll(t)
         for c in self.children:
             progress |= c.pump(t, drain)
         return progress
@@ -395,8 +509,21 @@ class ShardGroup:
         return False
 
     def next_deadline(self) -> float:
-        return min((c.next_deadline() for c in self.children),
-                   default=math.inf)
+        nxt = min((c.next_deadline() for c in self.children),
+                  default=math.inf)
+        if self.hedge is not None:
+            # a pending reissue is a deadline too: the run loop must wake
+            # AT it instead of blocking on the straggler it would rescue
+            nxt = min([nxt] + [dr.next_deadline()
+                               for dr in self.hedge.per_shard])
+            if self.hedge.flights:
+                # first-response-wins cannot be realized by blocking on an
+                # arbitrary child: while any tracked flush (primary or
+                # duplicate) is outstanding, keep the loop polling — 0.0 is
+                # finite and always past, so the loop naps briefly instead
+                # of entering the blocking-harvest branch
+                nxt = min(nxt, 0.0)
+        return nxt
 
     def idle(self) -> bool:
         return all(c.idle() for c in self.children)
@@ -404,6 +531,101 @@ class ShardGroup:
     def workers(self):
         for c in self.children:
             yield from c.workers()
+
+
+class MeshShardWorker(EngineWorker):
+    """ONE worker driving the whole shard set on a device mesh: a flush
+    scatters the batch's per-owner probe tables to every device through
+    the MeshBackend's shard_map step (each device searches its own
+    partition), and a single harvest deposits EVERY owner's partial top-k
+    at once — the all_gather collective already brought them to the
+    origin. The flush/credit/FIFO machinery is inherited unchanged, so
+    admission control and backpressure behave exactly as in-process.
+
+    ``engine`` is the MeshBackend itself: it exposes ``compile_count``
+    (the worker report's only engine touchpoint on this path), and
+    ``_dispatch`` goes through ``search_scattered`` rather than any
+    per-engine entry point."""
+
+    def __init__(self, backend, sink: "ShardedSink", *, tables: np.ndarray,
+                 touches: np.ndarray, slots: np.ndarray, **kw):
+        super().__init__(backend, sink, **kw)
+        self.backend = backend
+        self.tables = tables              # (O, N, P) per-owner local cids
+        self.touches = touches            # (N, O) bool
+        self.slots = slots                # (N, O) gather slot per owner
+        self.n_owners = tables.shape[0]
+        self.queries_per_shard = np.zeros(self.n_owners, np.int64)
+
+    def _dispatch(self, take):
+        t = np.asarray(take)
+        res = self.backend.search_scattered(
+            self.sink.q[t], self.tables[:, t, :],
+            pad_to=self._bucket_for(len(t)))
+        return res, None
+
+    def _finish(self, idxs, res, _t_dispatch):
+        nq = len(idxs)
+        ids = np.asarray(res.ids)[:, :nq]     # (O, nq, k)
+        ds = np.asarray(res.dists)[:, :nq]
+        for o in range(self.n_owners):
+            m = self.touches[idxs, o]
+            if m.any():
+                sel = idxs[m]
+                self.sink.finish_partial(sel, self.slots[sel, o],
+                                         ids[o][m], ds[o][m])
+                self.queries_per_shard[o] += int(m.sum())
+
+
+class MeshShardGroup:
+    """Tree root for the mesh execution backend: the ShardGroup's deal
+    semantics (unrouted queries complete immediately; head-of-line
+    backpressure on the worker's credits) over a SINGLE MeshShardWorker —
+    per-owner fan-out happens inside the collective, not in the tree."""
+
+    def __init__(self, worker: MeshShardWorker, pending: np.ndarray,
+                 sink: ShardedSink, k: int, backpressure: bool):
+        self.worker = worker
+        self.pending = pending
+        self.sink = sink
+        self.backpressure = backpressure
+        self._none_ids = np.full((1, k), -1, np.int32)
+        self._none_d = np.full((1, k), np.inf, np.float32)
+
+    def deal(self, admission: AdmissionController, quantum: int):
+        q = admission.queue
+        while q:
+            idx = q[0]
+            if self.pending[idx] == 0:    # unrouted: completes immediately
+                q.popleft()
+                self.sink.finish(np.asarray([idx]), self._none_ids,
+                                 self._none_d)
+                continue
+            if self.backpressure and self.worker.room() <= 0:
+                return                    # head waits; deadline may shed it
+            q.popleft()
+            self.worker.submit(idx)
+
+    def pump(self, t: float, drain: bool) -> bool:
+        return self.worker.pump(t, drain=drain, block_when_full=False)
+
+    def harvest(self) -> bool:
+        return self.worker.harvest(block=False)
+
+    def block_harvest_one(self) -> bool:
+        if self.worker.inflight:
+            self.worker.harvest(block=True)
+            return True
+        return False
+
+    def next_deadline(self) -> float:
+        return self.worker.next_deadline()
+
+    def idle(self) -> bool:
+        return self.worker.idle()
+
+    def workers(self):
+        yield self.worker
 
 
 # ---------------------------------------------------------------------------
@@ -441,6 +663,12 @@ class TopologyReport:
     shards: int
     replicas: list           # replica count per shard group
     backends: list           # per-shard declared backend (scfg.mode)
+    # appended with defaults so positional construction in older callers/
+    # tests keeps working unchanged (ISSUE 6)
+    exec: str = "inproc"     # execution backend the tier ran on
+    n_reissued: int = 0      # hedged (speculative duplicate) flushes
+    n_duplicate_drops: int = 0   # race losers dropped before deposit
+    shard_ewma_ms: list = dataclasses.field(default_factory=list)
 
 
 class ServingTopology:
@@ -458,7 +686,17 @@ class ServingTopology:
     apply uniformly at the root, whatever the tree shape (this is the
     point of the refactor: the sharded tier had none of them).
     ``backpressure=False`` reproduces the legacy ShardedFleet eager
-    scatter for the facade's bit-parity contract."""
+    scatter for the facade's bit-parity contract.
+
+    ``exec`` selects HOW the tree runs (ISSUE 6): ``"inproc"`` (default)
+    dispatches each worker's flushes through the engines' own entry
+    points exactly as before; ``"mesh"`` lays the shard partitions along
+    a named device-mesh axis and runs scatter -> probed search -> gather
+    as one shard_map-lowered collective step per flush (admitted results
+    stay bit-identical — the origin merge recomputes exact distances
+    either way). An ``ExecutionBackend`` instance is also accepted.
+    ``hedge`` (a ``HedgeConfig``) enables speculative re-dispatch of
+    overdue flushes to replicas on the in-process sharded path."""
 
     def __init__(self, groups, *, part_of=None, local_cid=None,
                  centroids=None, route: str = "least-in-flight",
@@ -468,7 +706,9 @@ class ServingTopology:
                  max_batch: int = 64,
                  admission_depth: int | str | None = "auto",
                  shed_deadline_s: float | None = None,
-                 backpressure: bool = True):
+                 backpressure: bool = True,
+                 exec: str = "inproc",
+                 hedge: HedgeConfig | None = None):
         self.groups = [list(g) for g in groups]
         if not self.groups or any(not g for g in self.groups):
             raise ValueError("ServingTopology needs at least one engine in "
@@ -544,6 +784,29 @@ class ServingTopology:
             self.fanout = 1
         self.modes = [getattr(g[0].scfg, "mode", "") for g in self.groups]
 
+        self._exec = execbackend_mod.resolve_exec_backend(exec)
+        self.hedge_cfg = hedge
+        if hedge is not None and not self.sharded:
+            raise ValueError("hedged dispatch re-runs SHARD flushes on "
+                             "replicas; a replicated tier has no scatter "
+                             "stage to hedge (needs shards >= 2)")
+        if self._exec.name == "mesh":
+            if not self.sharded:
+                raise ValueError("the mesh execution backend lays shard "
+                                 "partitions along a device axis; a "
+                                 "replicated tier has nothing to scatter "
+                                 "(use exec='inproc')")
+            if any(len(g) != 1 for g in self.groups):
+                raise ValueError(
+                    "exec='mesh' drives one device per shard group; "
+                    "replication is the mesh's job (launch more processes),"
+                    " so each group must hold exactly one engine")
+            if hedge is not None:
+                raise ValueError("hedging needs in-process replicas to "
+                                 "reissue onto; exec='mesh' has one device "
+                                 "per shard (use exec='inproc')")
+            self._exec.prepare(self)
+
     # -- warmup ---------------------------------------------------------------
     def warm(self) -> int:
         """Pre-compile every executable a run can touch — per engine one
@@ -552,6 +815,18 @@ class ServingTopology:
         topologies — so a timed stream measures serving, not tracing.
         Replicas sharing a compile cache warm once. Returns the number of
         engine executables built."""
+        if self._exec.name == "mesh":
+            # one shard_map step per bucket shape replaces ALL per-engine
+            # probed-search executables; the origin merge still compiles
+            n = self._exec.warm(self.buckets, self.nprobe)
+            dim = int(self.centroids.shape[1])
+            for b in self.buckets:
+                out = rerank_mod.rerank(
+                    jnp.zeros((b, dim), jnp.float32),
+                    jnp.full((b, self.fanout * self.k), -1, jnp.int32),
+                    self.vectors, k=self.k)
+                np.asarray(out.ids)
+            return n
         seen: set[int] = set()
         engines = []
         for g in self.groups:
@@ -608,9 +883,15 @@ class ServingTopology:
             match_all = np.asarray([b is None for b in req.tolist()])
             live = (modes[self.part_of[probe]] == req[:, None]) \
                 | match_all[:, None]
-        return ivf_mod.split_probes_by_owner(
-            probe, self.part_of, self.local_cid, len(self.groups),
-            live=live)
+        if live is None:
+            live = np.ones(probe.shape, bool)
+        # the jit-lowerable op (one shape per run — no compile churn);
+        # equivalence with the numpy split is pinned in test_execbackend
+        tables, touches = ivf_mod.owner_split_op(
+            jnp.asarray(probe), jnp.asarray(self.part_of),
+            jnp.asarray(self.local_cid), jnp.asarray(live),
+            n_owners=len(self.groups))
+        return np.asarray(tables), np.asarray(touches)
 
     # -- origin gather/merge --------------------------------------------------
     def _merge(self, sink: ShardedSink, t: float, drain: bool,
@@ -641,17 +922,19 @@ class ServingTopology:
         return True
 
     # -- per-run tree construction --------------------------------------------
-    def _build_tree(self, sink, tables, slots):
+    def _build_tree(self, sink, tables, slots, hedge=None):
         stream_kw = dict(buckets=self.buckets,
                          fill_threshold=self.fill_threshold,
                          wait_limit_s=self.wait_limit_s,
-                         fifo_depth=self.fifo_depth)
+                         fifo_depth=self.fifo_depth,
+                         exec_backend=self._exec)
         if not self.sharded:
             return ReplicaGroup([EngineWorker(e, sink, **stream_kw)
                                  for e in self.groups[0]], self.route)
         children = [
             ReplicaGroup([ShardWorker(e, sink, probes=tables[o],
-                                      slot=slots[:, o], **stream_kw)
+                                      slot=slots[:, o], shard=o,
+                                      hedge=hedge, **stream_kw)
                           for e in grp], self.route)
             for o, grp in enumerate(self.groups)]
         return children
@@ -669,15 +952,30 @@ class ServingTopology:
         arr = np.zeros(n) if arrival_times is None \
             else np.asarray(arrival_times, np.float64)
         order = np.argsort(arr, kind="stable")
+        hedge_rt = None
         if self.sharded:
             tables, touches = self._route_probes(q, backend)
             slots = np.cumsum(touches, axis=1) - 1
             pending = touches.sum(axis=1).astype(np.int32)
             sink = ShardedSink(q, arr, self.k, self.fanout)
             sink.pending[:] = pending
-            root = ShardGroup(self._build_tree(sink, tables, slots),
-                              touches, pending, sink, self.k,
-                              self.backpressure)
+            if self._exec.name == "mesh":
+                w = MeshShardWorker(
+                    self._exec, sink, tables=tables, touches=touches,
+                    slots=slots, buckets=self.buckets,
+                    fill_threshold=self.fill_threshold,
+                    wait_limit_s=self.wait_limit_s,
+                    fifo_depth=self.fifo_depth)
+                root = MeshShardGroup(w, pending, sink, self.k,
+                                      self.backpressure)
+            else:
+                if self.hedge_cfg is not None:
+                    hedge_rt = ShardHedge(self.hedge_cfg, len(self.groups),
+                                          sink.now)
+                root = ShardGroup(
+                    self._build_tree(sink, tables, slots, hedge_rt),
+                    touches, pending, sink, self.k, self.backpressure,
+                    hedge_rt)
         else:
             if backend is not None:
                 raise ValueError("backend routing needs a sharded topology "
@@ -738,19 +1036,41 @@ class ServingTopology:
             dt = nxt - sink.now()
             time.sleep(min(max(dt, 5e-5), 5e-4))
         makespan = sink.now()
-        run_groups = [list(c.children) for c in root.children] \
-            if self.sharded else [list(root.children)]
+        if isinstance(root, MeshShardGroup):
+            run_groups = [[root.worker]]  # one worker drives every shard
+        elif self.sharded:
+            run_groups = [list(c.children) for c in root.children]
+        else:
+            run_groups = [list(root.children)]
         return self._report(sink, shed, shed_wait, pending, merge_sizes,
-                            makespan, n, run_groups)
+                            makespan, n, run_groups, hedge_rt)
 
     # -- reporting ------------------------------------------------------------
     def _report(self, sink, shed, shed_wait, pending, merge_sizes,
-                makespan: float, n: int, run_groups: list) -> TopologyReport:
+                makespan: float, n: int, run_groups: list,
+                hedge_rt: ShardHedge | None = None) -> TopologyReport:
         n_shed = int(shed.sum())
         n_admitted = n - n_shed
         flush_sizes = [s for grp in run_groups for w in grp
                        for s in w.flush_sizes]
         per_engine = []
+        if self.sharded and run_groups \
+                and isinstance(run_groups[0][0], MeshShardWorker):
+            # one worker drove the whole mesh: report per SHARD (device)
+            # with the shard_map executables attributed once, to shard 0
+            w = run_groups[0][0]
+            per_engine = [
+                {"engine": o, "shard": o, "replica": 0,
+                 "backend": self.modes[o],
+                 "flushes": len(w.flush_sizes) if o == 0 else 0,
+                 "queries": int(w.queries_per_shard[o]),
+                 "max_in_flight": w.max_in_flight if o == 0 else 0,
+                 "compiles": w.compiles if o == 0 else 0,
+                 "clusters": int(self.groups[o][0].index.n_clusters)}
+                for o in range(len(self.groups))]
+            return self._finish_report(
+                sink, shed, shed_wait, pending, merge_sizes, makespan, n,
+                flush_sizes, per_engine, hedge_rt)
         seen_caches: set[int] = set()
         j = 0
         for o, grp_workers in enumerate(run_groups):
@@ -772,6 +1092,15 @@ class ServingTopology:
                     if self.sharded else None})
                 seen_caches.add(cache)
                 j += 1
+        return self._finish_report(sink, shed, shed_wait, pending,
+                                   merge_sizes, makespan, n, flush_sizes,
+                                   per_engine, hedge_rt)
+
+    def _finish_report(self, sink, shed, shed_wait, pending, merge_sizes,
+                       makespan, n, flush_sizes, per_engine,
+                       hedge_rt) -> TopologyReport:
+        n_shed = int(shed.sum())
+        n_admitted = n - n_shed
         return TopologyReport(
             ids=sink.out_ids, dists=sink.out_d, latency_s=sink.lat,
             shed=shed, shed_wait_s=shed_wait,
@@ -793,7 +1122,11 @@ class ServingTopology:
             per_engine=per_engine, makespan_s=makespan, route=self.route,
             shards=len(self.groups) if self.sharded else 1,
             replicas=[len(g) for g in self.groups],
-            backends=list(self.modes))
+            backends=list(self.modes),
+            exec=self._exec.name,
+            n_reissued=hedge_rt.n_reissued if hedge_rt else 0,
+            n_duplicate_drops=hedge_rt.n_duplicate_drops if hedge_rt else 0,
+            shard_ewma_ms=hedge_rt.shard_ewma_ms if hedge_rt else [])
 
 
 def topology(eng, *, shards: int = 1, replicas: int = 1,

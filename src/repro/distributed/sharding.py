@@ -27,8 +27,15 @@ def current_mesh() -> Mesh | None:
     m = getattr(_state, "mesh", None)
     if m is not None:
         return m
-    # fall back to the ambient `with mesh:` context if one is active
-    env = jax.sharding.get_abstract_mesh() if hasattr(jax.sharding, "get_abstract_mesh") else None
+    # fall back to the ambient `with mesh:` context if one is active; on
+    # jax 0.4.x that context lives in pxla's thread resources (there is no
+    # jax.sharding.get_abstract_mesh on the pinned version)
+    try:
+        phys = jax.interpreters.pxla.thread_resources.env.physical_mesh
+    except AttributeError:
+        return None
+    if phys is not None and not getattr(phys, "empty", True):
+        return phys
     return None
 
 

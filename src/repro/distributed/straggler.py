@@ -19,10 +19,33 @@ against wall-clock time.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable
 
-__all__ = ["EwmaTracker", "DeadlineReissue"]
+__all__ = ["EwmaTracker", "DeadlineReissue", "HedgeConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HedgeConfig:
+    """Hedged-dispatch policy for the serving topology's scatter path
+    (``core.topology.ServingTopology(hedge=...)``): a flush whose shard has
+    not answered within ``k`` x the shard's EWMA latency is speculatively
+    re-dispatched to the least-loaded replica of that shard; the first
+    response wins and duplicates are dropped. ``max_reissue`` bounds the
+    duplicated work per flush; ``alpha`` is the EWMA smoothing factor."""
+    k: float = 3.0
+    max_reissue: int = 1
+    alpha: float = 0.2
+
+    def __post_init__(self):
+        if not self.k > 0:
+            raise ValueError(f"deadline multiplier k must be > 0, got {self.k}")
+        if self.max_reissue < 1:
+            raise ValueError(
+                f"max_reissue must be >= 1, got {self.max_reissue}")
+        if not 0 < self.alpha <= 1:
+            raise ValueError(f"alpha must be in (0, 1], got {self.alpha}")
 
 
 @dataclasses.dataclass
@@ -67,6 +90,21 @@ class DeadlineReissue:
             self.tracker.update(self.clock() - t0)
         return True
 
+    def next_deadline(self) -> float:
+        """Earliest instant an in-flight batch becomes overdue (inf when
+        nothing reissuable is in flight) — lets an event loop nap until a
+        reissue could fire instead of polling. While the latency estimate
+        is UNSEEDED the deadline cannot be computed, so the oldest dispatch
+        time (already past) is returned: the loop must keep polling rather
+        than block behind the very straggler it would rescue."""
+        ts = [t0 for bid, t0 in self._inflight.items()
+              if self._reissues.get(bid, 0) < self.max_reissue]
+        if not ts:
+            return math.inf
+        if self.tracker.value is None:
+            return min(ts)
+        return min(ts) + self.k * self.tracker.value
+
     def poll(self) -> list:
         """Batch ids overdue for speculative re-dispatch."""
         if self.tracker.value is None:
@@ -74,8 +112,11 @@ class DeadlineReissue:
         deadline = self.k * self.tracker.value
         now = self.clock()
         out = []
+        # `now >= t0 + deadline` (NOT `now - t0 >= deadline`): callers wake
+        # at exactly `t0 + deadline` and the subtraction form can round one
+        # ulp below the threshold, silently skipping the reissue
         for bid, t0 in self._inflight.items():
-            if now - t0 > deadline and \
+            if now >= t0 + deadline and \
                     self._reissues.get(bid, 0) < self.max_reissue:
                 self._reissues[bid] = self._reissues.get(bid, 0) + 1
                 self.reissued_total += 1

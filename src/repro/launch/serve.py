@@ -30,6 +30,14 @@ multi-node serving shape under the RAG loop. Adding --replicas R
 replicates EACH partition R ways (the hybrid tier: partition for
 capacity, replicate for throughput), with tier-wide admission control.
 
+--fleet N --sharded --exec mesh runs the same partitioned topology on a
+REAL device mesh (one device per shard along a named axis): scatter ->
+probed search -> gather lowers to one shard_map step with all_gather
+collectives (core/execbackend.py). Needs N visible devices — force them
+on CPU with XLA_FLAGS=--xla_force_host_platform_device_count=N, or
+launch one process per host via jax.distributed for the identical code
+path over real hosts. Results are bit-identical to --exec inproc.
+
 --sharded / --replicas without --fleet >= 2 is an argument ERROR, not a
 silent single-engine run.
 """
@@ -107,7 +115,7 @@ ENCODERS: dict[str, Callable[..., QueryEncoder]] = {
 def run(arch: str, requests: int, prompt_len: int, gen: int,
         rag: bool = False, seed: int = 0, verbose: bool = True,
         query_encoder: QueryEncoder | str | None = None, fleet: int = 1,
-        sharded: bool = False, replicas: int = 1):
+        sharded: bool = False, replicas: int = 1, exec: str = "inproc"):
     # flag-consistency first: these used to be SILENTLY ignored, burning a
     # debugging session on a "sharded" run that never sharded anything
     if sharded and fleet < 2:
@@ -121,6 +129,14 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
             f"--sharded; for plain replication use --fleet N alone")
     if replicas < 1:
         raise ValueError(f"--replicas must be >= 1, got {replicas}")
+    if exec != "inproc" and not sharded:
+        raise ValueError(
+            f"--exec {exec} runs the SHARDED scatter/gather on a device "
+            f"mesh and needs --sharded (with --fleet >= 2)")
+    if exec == "mesh" and replicas > 1:
+        raise ValueError(
+            "--exec mesh drives one device per shard; replication on the "
+            "mesh is a multi-process launch, not --replicas")
     cfg = get_smoke(arch)
     model = build_model(cfg)
     key = jax.random.PRNGKey(seed)
@@ -140,7 +156,7 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
             # their probed clusters, partial top-k gathers on the origin,
             # and admission control applies tier-wide
             scheduler = topology(
-                eng, shards=fleet, replicas=replicas,
+                eng, shards=fleet, replicas=replicas, exec=exec,
                 buckets=bucket_ladder(max(requests, 1)),
                 fill_threshold=max(requests // 2, 1), wait_limit_s=5e-3)
         elif fleet > 1:
@@ -241,6 +257,12 @@ def main():
                     help="with --fleet N --sharded: replicate EACH "
                          "partition this many ways (the hybrid tier; "
                          "default 1)")
+    ap.add_argument("--exec", default="inproc", choices=["inproc", "mesh"],
+                    help="with --fleet N --sharded: execution backend — "
+                         "'mesh' lays the shards along a device-mesh axis "
+                         "and runs scatter/gather as collectives (needs N "
+                         "devices: XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N or a jax.distributed launch)")
     args = ap.parse_args()
     # surface flag misuse as an argparse error (exit 2 + usage), not a
     # silently different topology
@@ -251,9 +273,14 @@ def main():
                  "--fleet N alone)")
     if args.replicas < 1:
         ap.error(f"--replicas must be >= 1, got {args.replicas}")
+    if args.exec != "inproc" and not args.sharded:
+        ap.error(f"--exec {args.exec} needs --sharded (with --fleet >= 2)")
+    if args.exec == "mesh" and args.replicas > 1:
+        ap.error("--exec mesh drives one device per shard; --replicas must "
+                 "be 1 (replicate by launching more processes)")
     run(args.arch, args.requests, args.prompt_len, args.gen, args.rag,
         query_encoder=args.encoder, fleet=args.fleet, sharded=args.sharded,
-        replicas=args.replicas)
+        replicas=args.replicas, exec=args.exec)
 
 
 if __name__ == "__main__":

@@ -2,8 +2,15 @@ import os
 import sys
 
 # tests see the single real CPU device (the dry-run sets its own flags in
-# its own process); keep any user XLA_FLAGS out of the picture
+# its own process); keep any user XLA_FLAGS out of the picture. The mesh
+# execution-backend lane opts back in to N forced host devices through
+# REPRO_FORCE_HOST_DEVICES (set before pytest, consumed here before any
+# jax import so the forcing actually takes effect).
 os.environ.pop("XLA_FLAGS", None)
+_ndev = os.environ.get("REPRO_FORCE_HOST_DEVICES")
+if _ndev:
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={int(_ndev)}"
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np

@@ -32,6 +32,29 @@ def test_resolve_spec_indivisible_replicates():
     assert sharding.resolve_spec(mesh, P("model"), (14,)) == P("model")
 
 
+def test_current_mesh_sees_ambient_mesh():
+    """Regression (ISSUE 6 satellite): current_mesh() used to compute the
+    ambient-mesh fallback into a local and then return None — dead code —
+    so mesh-context callers outside use_mesh() always lost the mesh."""
+    assert sharding.current_mesh() is None
+    mesh = jax.make_mesh((1,), ("data",))
+    with mesh:                        # ambient activation, NOT use_mesh()
+        got = sharding.current_mesh()
+        assert got is not None
+        assert dict(zip(got.axis_names, got.devices.shape)) == {"data": 1}
+    assert sharding.current_mesh() is None
+
+
+def test_current_mesh_use_mesh_takes_precedence():
+    ours = jax.make_mesh((1,), ("model",))
+    ambient = jax.make_mesh((1,), ("data",))
+    with ambient:
+        with sharding.use_mesh(ours):
+            assert sharding.current_mesh() is ours
+        got = sharding.current_mesh()
+        assert got is not None and got.axis_names == ("data",)
+
+
 def test_quantize_roundtrip_error_small():
     x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (1024,)),
                     jnp.float32)

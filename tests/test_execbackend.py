@@ -1,0 +1,183 @@
+"""Execution backends (ISSUE 6 tentpole): registry resolution, validation
+seams, the lowerable owner-split op, and — on a forced multi-device host
+(REPRO_FORCE_HOST_DEVICES=N before pytest) — bit-parity of the mesh
+backend's shard_map scatter/gather with the in-process backend and with a
+single engine searching the same probed clusters."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import compact_index, engine, ivf
+from repro.core.execbackend import (EXEC_BACKENDS, INPROC, InProcBackend,
+                                    MeshBackend, resolve_exec_backend)
+from repro.core.topology import ServingTopology, topology
+from repro.data.synthetic import clustered_vectors, query_set
+from repro.distributed.straggler import HedgeConfig
+from repro.launch.mesh import make_shard_mesh
+
+needs_mesh = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="mesh lane: set REPRO_FORCE_HOST_DEVICES>=4 before pytest")
+
+STREAM = dict(buckets=(8, 16), fill_threshold=16, wait_limit_s=1e-3,
+              fifo_depth=2)
+
+
+@pytest.fixture(scope="module")
+def eng_q():
+    x, _ = clustered_vectors(3, 2000, 32, 8)
+    q = query_set(3, x, 37)
+    icfg = compact_index.IndexConfig(dim=32, n_clusters=8, degree=8, knn_k=16)
+    scfg = engine.SearchConfig(nprobe=2, ef=16, k=5)
+    eng = engine.PIMCQGEngine.build(jax.random.PRNGKey(0), x, icfg, scfg,
+                                    n_shards=2)
+    return eng, q
+
+
+# ---------------------------------------------------------------------------
+# registry + validation (single-device safe: every error raises BEFORE any
+# mesh is built, so the seam's contract is pinned in the default lane too)
+# ---------------------------------------------------------------------------
+
+def test_registry_resolves_keys_and_instances():
+    assert resolve_exec_backend("inproc") is INPROC
+    m = resolve_exec_backend("mesh")
+    assert isinstance(m, MeshBackend) and m.name == "mesh"
+    # each topology gets its OWN mesh backend (prepare binds state)
+    assert resolve_exec_backend("mesh") is not m
+    # instances pass through (pre-built mesh injection)
+    assert resolve_exec_backend(m) is m
+    assert resolve_exec_backend(InProcBackend()) is not INPROC
+    assert set(EXEC_BACKENDS) >= {"inproc", "mesh"}
+
+
+def test_registry_rejects_unknowns():
+    with pytest.raises(ValueError, match="unknown execution backend"):
+        resolve_exec_backend("upmem")
+    with pytest.raises(ValueError, match="registry key or ExecutionBackend"):
+        resolve_exec_backend(42)
+
+
+def test_exec_mesh_requires_sharded_topology(eng_q):
+    eng, _ = eng_q
+    with pytest.raises(ValueError, match="nothing to scatter"):
+        topology(eng, shards=1, replicas=2, exec="mesh", **STREAM)
+
+
+def test_exec_mesh_rejects_replicas_and_hedge(eng_q):
+    eng, _ = eng_q
+    # replication is the mesh's job (one device per shard on the axis)
+    with pytest.raises(ValueError, match="replica"):
+        topology(eng, shards=2, replicas=2, exec="mesh", **STREAM)
+    # hedging re-dispatches across replicas — meaningless on the mesh path
+    with pytest.raises(ValueError, match="hedging needs in-process"):
+        topology(eng, shards=2, exec="mesh", hedge=HedgeConfig(), **STREAM)
+
+
+def test_mesh_backend_guards_unprepared_and_per_engine_entry_points():
+    mb = MeshBackend()
+    with pytest.raises(RuntimeError, match="prepare"):
+        mb.search_scattered(np.zeros((1, 4), np.float32),
+                            np.full((2, 1, 2), -1, np.int32), pad_to=8)
+    with pytest.raises(NotImplementedError):
+        mb.search(None, None, pad_to=8)
+    with pytest.raises(NotImplementedError):
+        mb.search_probed(None, None, None, pad_to=8)
+
+
+def test_make_shard_mesh_error_names_the_flag():
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="xla_force_host_platform_device_count"):
+        make_shard_mesh(n + 1)
+    with pytest.raises(ValueError, match="at least one"):
+        make_shard_mesh(0)
+
+
+# ---------------------------------------------------------------------------
+# owner_split_op: the lowerable scatter router
+# ---------------------------------------------------------------------------
+
+def test_owner_split_op_matches_numpy_split():
+    rng = np.random.default_rng(5)
+    C, Q, P, O = 12, 40, 3, 4
+    owner_of = rng.integers(0, O, C).astype(np.int32)
+    local_cid = np.zeros(C, np.int32)
+    for o in range(O):
+        m = owner_of == o
+        local_cid[m] = np.arange(m.sum())
+    probes = rng.integers(-1, C, (Q, P)).astype(np.int32)   # holes included
+    live = rng.random((Q, P)) < 0.7
+
+    for lv in (None, live):
+        ref_t, ref_m = ivf.split_probes_by_owner(probes, owner_of, local_cid,
+                                                 O, live=lv)
+        got_t, got_m = jax.jit(ivf.owner_split_op, static_argnames="n_owners")(
+            jnp.asarray(probes), jnp.asarray(owner_of),
+            jnp.asarray(local_cid),
+            jnp.asarray(np.ones((Q, P), bool) if lv is None else lv),
+            n_owners=O)
+        np.testing.assert_array_equal(np.asarray(got_t), ref_t)
+        np.testing.assert_array_equal(np.asarray(got_m), ref_m)
+
+
+# ---------------------------------------------------------------------------
+# mesh-backend parity (forced-device lane): the acceptance criterion —
+# scatter -> shard_map search_probed -> all_gather is bit-identical to the
+# in-process backend AND to one engine searching the same probed clusters
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+@pytest.mark.parametrize("parts", [2, 4])
+def test_mesh_backend_bit_identical_to_inproc_and_single_engine(eng_q, parts):
+    eng, q = eng_q
+    sync, _ = eng.search(q)
+    mesh_rep = topology(eng, shards=parts, exec="mesh", **STREAM).run(q)
+    inproc_rep = topology(eng, shards=parts, **STREAM).run(q)
+    assert mesh_rep.exec == "mesh" and inproc_rep.exec == "inproc"
+    np.testing.assert_array_equal(mesh_rep.ids, inproc_rep.ids)
+    np.testing.assert_array_equal(mesh_rep.dists, inproc_rep.dists)
+    np.testing.assert_array_equal(mesh_rep.ids, np.asarray(sync.ids))
+    # vs ONE engine, merged dists go through the origin rerank (different
+    # reduction order): same tolerance the sharded-parity suite pins
+    np.testing.assert_allclose(mesh_rep.dists, np.asarray(sync.dists),
+                               rtol=1e-5, atol=1e-4)
+    # the scatter actually fanned out: every owner saw queries
+    per = {d["engine"]: d for d in mesh_rep.per_engine}
+    assert len(per) == parts
+    assert all(d["queries"] > 0 for d in per.values())
+
+
+@needs_mesh
+def test_mesh_warm_precompiles_every_bucket(eng_q):
+    eng, q = eng_q
+    topo = topology(eng, shards=2, exec="mesh", **STREAM)
+    n = topo.warm()
+    assert n == len(STREAM["buckets"])
+    c0 = topo._exec.compile_count
+    rep = topo.run(q)
+    assert topo._exec.compile_count == c0          # warm covered the run
+    np.testing.assert_array_equal(rep.ids, np.asarray(eng.search(q)[0].ids))
+
+
+@needs_mesh
+def test_mesh_backend_accepts_prebuilt_mesh(eng_q):
+    eng, q = eng_q
+    mesh = make_shard_mesh(2, axis="shard")
+    topo = topology(eng, shards=2, exec=MeshBackend(mesh=mesh), **STREAM)
+    rep = topo.run(q)
+    np.testing.assert_array_equal(rep.ids, np.asarray(eng.search(q)[0].ids))
+    # a pre-built mesh whose axis size disagrees with the topology must
+    # raise, not silently truncate the shard layout
+    with pytest.raises(ValueError, match="shard groups"):
+        topology(eng, shards=4, exec=MeshBackend(mesh=mesh), **STREAM)
+
+
+def test_exec_inproc_explicit_matches_default(eng_q):
+    eng, q = eng_q
+    a = topology(eng, shards=2, exec="inproc", **STREAM).run(q)
+    b = topology(eng, shards=2, **STREAM).run(q)
+    assert a.exec == b.exec == "inproc"
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.dists, b.dists)

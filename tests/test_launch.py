@@ -71,3 +71,15 @@ def test_serve_rejects_inconsistent_topology_flags():
     with pytest.raises(ValueError, match="--replicas"):
         run("h2o-danube-1.8b", 2, 16, 4, rag=True, fleet=2, sharded=True,
             replicas=0)
+
+
+def test_serve_rejects_exec_flag_misuse():
+    """--exec mesh without --sharded, or with replication, raises before
+    any model is built (ISSUE 6: the mesh backend drives one device per
+    shard; a replicated tier has nothing to scatter)."""
+    from repro.launch.serve import run
+    with pytest.raises(ValueError, match="--exec mesh"):
+        run("h2o-danube-1.8b", 2, 16, 4, rag=True, fleet=2, exec="mesh")
+    with pytest.raises(ValueError, match="one device per shard"):
+        run("h2o-danube-1.8b", 2, 16, 4, rag=True, fleet=2, sharded=True,
+            replicas=2, exec="mesh")
