@@ -50,6 +50,33 @@ class SearchConfig:
                               # 'exact' = SymphonyQG baseline, 'hamming', ...)
     scan: str = "beam"        # 'beam' | 'gemv' (full-cluster scan, Fig 19)
     lane_capacity_factor: float = 2.0  # per-shard lane buffer headroom
+    # adaptive early termination (ivf.adaptive_keep_mask): 0.0 = off (the
+    # default keeps every search graph bit-identical to fixed effort).
+    # With tau > 0, probe j survives while d2_j <= tau * d2_0; the count is
+    # floored at adaptive_min_probes and rounded up to the next rung of
+    # adaptive_ladder (ascending probe counts, () = any count). Easy
+    # queries then search fewer clusters — and on the sharded tier fan out
+    # to fewer shards.
+    adaptive_tau: float = 0.0
+    adaptive_min_probes: int = 1
+    adaptive_ladder: tuple = ()
+
+    def __post_init__(self):
+        if self.adaptive_tau < 0:
+            raise ValueError(
+                f"adaptive_tau must be >= 0 (0 disables), got "
+                f"{self.adaptive_tau}")
+        if self.adaptive_min_probes < 1:
+            raise ValueError(
+                f"adaptive_min_probes must be >= 1, got "
+                f"{self.adaptive_min_probes}")
+        ladder = tuple(self.adaptive_ladder)
+        object.__setattr__(self, "adaptive_ladder", ladder)
+        if any(int(r) != r or r < 1 for r in ladder) or \
+                list(ladder) != sorted(set(ladder)):
+            raise ValueError(
+                f"adaptive_ladder must be strictly-ascending positive "
+                f"ints, got {ladder!r}")
 
 
 @jax.tree_util.register_dataclass
@@ -273,7 +300,16 @@ class PIMCQGEngine:
         @jax.jit
         def search_step(placed: PlacedIndex, centroids, rotation, vectors,
                         queries, n_valid):
-            probe, _ = ivf.cluster_filter(queries, centroids, nprobe=cfg.nprobe)
+            probe, pdist = ivf.cluster_filter(queries, centroids,
+                                              nprobe=cfg.nprobe)
+            if cfg.adaptive_tau > 0:
+                # adaptive early termination: easy queries keep fewer
+                # probes; masked probes are -1 holes route_lanes skips
+                keep = ivf.adaptive_keep_mask(
+                    pdist, tau=cfg.adaptive_tau,
+                    min_probes=cfg.adaptive_min_probes,
+                    ladder=cfg.adaptive_ladder)
+                probe = jnp.where(keep, probe, -1)
             valid = jnp.arange(bucket, dtype=jnp.int32) < n_valid
             cap_valid = cap_table[jnp.clip(n_valid, 0, bucket)]
             lane_q, lane_cl, inv, dropped = route_lanes(

@@ -24,7 +24,9 @@ unmodified against them) plus their reports and builders:
     ``placement.greedy_place``); the origin runs IVF top-probe selection
     once, scatters each query to the <= nprobe owning engines
     (``ivf.split_probes_by_owner`` -> ``engine.search_probed``), and
-    merges gathered partial top-k through the sort-based rerank path —
+    merges the gathered pre-sorted partial top-k by selection alone
+    (``kernels.ops.merge_topk`` — shards already return exact-reranked
+    distances over disjoint cluster slices, so no recompute or dedup) —
     bit-identical to a single engine searching the same probed clusters.
     Heterogeneity-aware: shards declare ``scfg.mode`` and queries may
     request a backend. The facade keeps the legacy eager-scatter
@@ -190,11 +192,12 @@ class ShardedFleet:
     same ``cluster_filter`` a single engine jits), scatters the query only
     to the <= nprobe engines owning its probed clusters, each engine
     beam-searches exactly those clusters and returns an exact-reranked
-    partial top-k, and the origin merges the gathered partials through the
-    same sort-based rerank path — bit-identical to a single engine
-    searching the same probed clusters (clusters partition the corpus, so
-    cross-shard candidates never collide and exact distances recomputed on
-    the origin reproduce the single-engine ranking). The parity contract
+    partial top-k, and the origin merges the gathered pre-sorted partials
+    by selection alone (``kernels.ops.merge_topk``) — bit-identical to a
+    single engine searching the same probed clusters (clusters partition
+    the corpus, so cross-shard candidates never collide and the shards'
+    exact distances reproduce the single-engine ranking without any
+    origin-side recompute). The parity contract
     presumes no lane-capacity overflow on either side: under extreme
     cluster-popularity skew a multi-inner-shard reference engine can drop
     lanes (``SearchStats.dropped_lanes``) where a 1-inner-shard partition

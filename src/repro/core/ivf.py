@@ -17,7 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["KMeansResult", "kmeans", "assign", "cluster_filter",
-           "bincount_sizes", "split_probes_by_owner", "owner_split_op"]
+           "adaptive_keep_mask", "bincount_sizes", "split_probes_by_owner",
+           "owner_split_op"]
 
 
 class KMeansResult(NamedTuple):
@@ -99,6 +100,38 @@ def cluster_filter(queries: jax.Array, centroids: jax.Array, *, nprobe: int):
     d2 = _sqdist(queries, centroids)
     neg, ids = jax.lax.top_k(-d2, nprobe)
     return ids.astype(jnp.int32), -neg
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "min_probes", "ladder"))
+def adaptive_keep_mask(probe_dists: jax.Array, *, tau: float,
+                       min_probes: int = 1, ladder: tuple = ()
+                       ) -> jax.Array:
+    """Per-query adaptive early termination over the probe ladder.
+
+    The centroid-distance margin ``cluster_filter`` already computes doubles
+    as a difficulty predictor: probe j is USEFUL while its squared distance
+    stays within ``tau`` of the nearest centroid's (``d2[:, j] <= tau *
+    d2[:, 0]``) — an easy query (large margin to the 2nd-nearest centroid)
+    keeps few probes, a hard one near a Voronoi boundary keeps many. The
+    useful count is floored at ``min_probes`` and, when a ``ladder`` of
+    allowed probe counts is given (ascending ints, e.g. ``(2, 4, 8)``),
+    rounded UP to the smallest rung that covers it (capping at the top
+    rung), so only len(ladder) effort levels ever exist.
+
+    probe_dists (Q, P) f32 ascending per row -> keep (Q, P) bool, a prefix
+    mask per row (probes are sorted, so dropping means dropping a suffix).
+    Masked probes become ``-1`` holes, which every downstream consumer
+    (``owner_split_op``, ``route_lanes``) already treats as no-ops.
+    """
+    p = probe_dists.shape[-1]
+    n = jnp.sum(probe_dists <= tau * probe_dists[:, :1], axis=-1)   # (Q,)
+    n = jnp.maximum(n, min_probes)
+    if ladder:
+        rungs = jnp.asarray(sorted(ladder), jnp.int32)
+        idx = jnp.searchsorted(rungs, n)                 # first rung >= n
+        n = rungs[jnp.clip(idx, 0, len(ladder) - 1)]
+    n = jnp.clip(n, 1, p)
+    return jnp.arange(p, dtype=jnp.int32)[None, :] < n[:, None]
 
 
 def bincount_sizes(assignment: np.ndarray, k: int) -> np.ndarray:

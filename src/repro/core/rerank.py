@@ -15,6 +15,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ops as kernel_ops
+
 __all__ = ["RerankResult", "rerank"]
 
 
@@ -38,23 +40,10 @@ def rerank(queries: jax.Array, cand_ids: jax.Array, vectors: jax.Array,
     dots = jnp.einsum("qd,qcd->qc", queries, cand)
     d2 = q2 + c2 - 2.0 * dots
 
-    # mask pads and duplicate ids, keeping the first occurrence. Sort-based
-    # dedup is O(C log C) memory-linear (the old pairwise (Q, C, C) mask was
-    # quadratic in C = nprobe*ef): stable-argsort groups equal ids with the
-    # earliest original position first, adjacent-compare marks the rest of
-    # each run, and the inverse permutation scatters the flags back.
-    order = jnp.argsort(cand_ids, axis=-1, stable=True)            # (Q, C)
-    sorted_ids = jnp.take_along_axis(cand_ids, order, axis=-1)
-    dup_sorted = jnp.concatenate(
-        [jnp.zeros_like(sorted_ids[:, :1], bool),
-         sorted_ids[:, 1:] == sorted_ids[:, :-1]], axis=-1)        # (Q, C)
-    inv = jnp.argsort(order, axis=-1, stable=True)
-    dup = jnp.take_along_axis(dup_sorted, inv, axis=-1)
-    bad = (cand_ids < 0) | dup
-    d2 = jnp.where(bad, jnp.inf, d2)
-
-    neg, pos = jax.lax.top_k(-d2, k)
-    ids = jnp.take_along_axis(cand_ids, pos, axis=-1)
-    dists = -neg
-    ids = jnp.where(jnp.isfinite(dists), ids, -1)
-    return RerankResult(ids.astype(jnp.int32), dists.astype(jnp.float32))
+    # dedup (keep-first) + k-selection, dispatched Pallas-vs-ref through the
+    # kernel seam: the ref is one stable argsort + a flag scatter + lax.top_k
+    # (O(C log C), memory-linear — never a (Q, C, C) XLA intermediate); the
+    # kernel fuses both into a streaming partial-bitonic selection. The two
+    # are bitwise-identical (tests/test_topk_select.py).
+    ids, dists = kernel_ops.topk_select(cand_ids, d2, k=k)
+    return RerankResult(ids, dists)

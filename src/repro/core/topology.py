@@ -19,7 +19,8 @@ module refactors the overload layer out so any topology gets it for free:
     query goes to the <= nprobe children owning its probed clusters
     (``ivf.split_probes_by_owner``), each child answers a partial top-k
     (``engine.search_probed``), and the origin merges the gathered
-    partials through the sort-based rerank path. Children of a
+    partials with the streaming k-selection kernel
+    (``kernels.ops.merge_topk``). Children of a
     ``ShardGroup`` are ``ReplicaGroup``s, so ``topology(shards=N,
     replicas=R)`` — each partition replicated R ways — composes with no
     new machinery, and heterogeneous backend routing (per-shard
@@ -33,20 +34,31 @@ module refactors the overload layer out so any topology gets it for free:
 Parity contract: admitted results of any topology are bit-identical to a
 single engine searching the same probed clusters — replication shares one
 placed index per shard, partitioning keeps cluster slices disjoint, and
-exact distances are recomputed at the origin merge (pinned in
+every shard's partial top-k already carries exact distances (each
+``search_probed`` ends in the exact host rerank), so the origin merge is
+pure k-selection over disjoint sorted runs (pinned in
 tests/test_topology.py for shards in {2, 4} x replicas in {1, 2}, batch +
 Poisson streams, and in tests/test_fleet.py / tests/test_sharded.py for
 the facades).
+
+Adaptive early termination (``SearchConfig.adaptive_tau`` > 0) trades the
+fixed-effort scatter for a per-query one: the IVF top-probe distances
+already computed for routing double as a difficulty predictor
+(``ivf.adaptive_keep_mask``), easy queries keep fewer probes and fan out
+to fewer shards. Off by default — with it off the scatter graphs are
+unchanged and the parity contract above holds bit-for-bit.
 """
 
 from __future__ import annotations
 
 import copy
 import dataclasses
+import functools
 import math
 import time
 from collections import deque
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -55,7 +67,7 @@ from . import engine as engine_mod
 from . import execbackend as execbackend_mod
 from . import ivf as ivf_mod
 from . import placement as placement_mod
-from . import rerank as rerank_mod
+from ..kernels import ops as kernel_ops
 from .pipeline import (EngineWorker, StageCosts, StreamSink, percentile_ms,
                        resolve_stream_params)
 from ..distributed.straggler import DeadlineReissue, HedgeConfig
@@ -410,7 +422,7 @@ class ShardedSink(StreamSink):
     """StreamSink plus the gather stage of the sharded tier: a per-query
     buffer of each owning shard's partial top-k (slot-major), a countdown
     of outstanding shards, and the queue of fully-gathered queries awaiting
-    the origin's merge rerank."""
+    the origin's k-selection merge."""
 
     def __init__(self, queries: np.ndarray, arrivals: np.ndarray, k: int,
                  fanout: int):
@@ -776,6 +788,19 @@ class ServingTopology:
                                      f"on the cluster slice")
             self.vectors = engines[0].host.vectors
             self.fanout = max(1, min(self.nprobe, len(self.groups)))
+            # origin gather/merge: selection-only over the shards' partial
+            # top-k runs (already exact-reranked and sorted per shard),
+            # dispatched Pallas-vs-ref through the kernel seam
+            self._merge_fn = jax.jit(
+                functools.partial(kernel_ops.merge_topk, k=self.k))
+            ad = {(getattr(e.scfg, "adaptive_tau", 0.0),
+                   getattr(e.scfg, "adaptive_min_probes", 1),
+                   getattr(e.scfg, "adaptive_ladder", ())) for e in engines}
+            if len(ad) != 1:
+                raise ValueError(
+                    f"engines disagree on adaptive termination: {sorted(ad)}")
+            (self.adaptive_tau, self.adaptive_min_probes,
+             self.adaptive_ladder) = next(iter(ad))
         else:
             if len(self.groups) != 1:
                 raise ValueError("multiple groups need a cluster partition "
@@ -811,7 +836,7 @@ class ServingTopology:
     def warm(self) -> int:
         """Pre-compile every executable a run can touch — per engine one
         padded search (replicated) or probed search (sharded) per bucket
-        shape, plus the origin merge rerank per bucket on sharded
+        shape, plus the origin merge kernel per bucket on sharded
         topologies — so a timed stream measures serving, not tracing.
         Replicas sharing a compile cache warm once. Returns the number of
         engine executables built."""
@@ -819,13 +844,7 @@ class ServingTopology:
             # one shard_map step per bucket shape replaces ALL per-engine
             # probed-search executables; the origin merge still compiles
             n = self._exec.warm(self.buckets, self.nprobe)
-            dim = int(self.centroids.shape[1])
-            for b in self.buckets:
-                out = rerank_mod.rerank(
-                    jnp.zeros((b, dim), jnp.float32),
-                    jnp.full((b, self.fanout * self.k), -1, jnp.int32),
-                    self.vectors, k=self.k)
-                np.asarray(out.ids)
+            self._warm_merge()
             return n
         seen: set[int] = set()
         engines = []
@@ -849,22 +868,32 @@ class ServingTopology:
                     res, _ = e.search(q1, pad_to=int(b))
                     np.asarray(res.ids)
         if self.sharded:
-            dim = int(self.centroids.shape[1])
-            for b in self.buckets:
-                out = rerank_mod.rerank(
-                    jnp.zeros((b, dim), jnp.float32),
-                    jnp.full((b, self.fanout * self.k), -1, jnp.int32),
-                    self.vectors, k=self.k)
-                np.asarray(out.ids)
+            self._warm_merge()
         return sum(e.compile_count for e in engines) - before
+
+    def _warm_merge(self):
+        for b in self.buckets:
+            out = self._merge_fn(
+                jnp.full((b, self.fanout * self.k), -1, jnp.int32),
+                jnp.full((b, self.fanout * self.k), jnp.inf, jnp.float32))
+            np.asarray(out[0])
 
     # -- scatter routing ------------------------------------------------------
     def _route_probes(self, q: np.ndarray, backend):
-        """(1) IVF top-probe selection on the origin, (2) backend match
-        filter, (3) per-owner scatter split. Returns (tables (O, N, P),
-        touches (N, O))."""
-        probe = np.asarray(ivf_mod.cluster_filter(
-            jnp.asarray(q), self.centroids, nprobe=self.nprobe)[0])
+        """(1) IVF top-probe selection on the origin (with optional
+        adaptive early termination: easy queries — small centroid-distance
+        margin — keep fewer probes and fan out to fewer shards), (2)
+        backend match filter, (3) per-owner scatter split. Returns
+        (tables (O, N, P), touches (N, O))."""
+        probe, pdist = ivf_mod.cluster_filter(
+            jnp.asarray(q), self.centroids, nprobe=self.nprobe)
+        if self.adaptive_tau > 0:
+            keep = ivf_mod.adaptive_keep_mask(
+                pdist, tau=self.adaptive_tau,
+                min_probes=self.adaptive_min_probes,
+                ladder=self.adaptive_ladder)
+            probe = jnp.where(keep, probe, -1)
+        probe = np.asarray(probe)
         live = None
         if backend is not None:
             req = np.full(len(q), backend, object) \
@@ -896,10 +925,13 @@ class ServingTopology:
     # -- origin gather/merge --------------------------------------------------
     def _merge(self, sink: ShardedSink, t: float, drain: bool,
                merge_sizes: list) -> bool:
-        """Merge fully-gathered queries' per-shard partial top-k through the
-        existing sort-based rerank path (exact distances recomputed from the
-        shared host store), flushed in bucket-padded batches like any other
-        stage so merging adds at most len(buckets) executables."""
+        """Merge fully-gathered queries' per-shard partial top-k runs with
+        the streaming k-selection kernel (selection-only: each shard already
+        exact-reranked its partials against the shared host store and the
+        cluster partition keeps their ids disjoint, so no distance recompute
+        and no dedup are needed at the origin), flushed in bucket-padded
+        batches like any other stage so merging adds at most len(buckets)
+        executables."""
         if not sink.ready:
             return False
         if not (len(sink.ready) >= self.fill_threshold or drain
@@ -911,13 +943,12 @@ class ServingTopology:
         take = np.asarray(take)
         nq = len(take)
         b = next(bb for bb in self.buckets if bb >= nq)
-        qb = np.zeros((b, sink.q.shape[1]), np.float32)
-        qb[:nq] = sink.q[take]
         cb = np.full((b, sink.part_ids.shape[1]), -1, np.int32)
         cb[:nq] = sink.part_ids[take]
-        out = rerank_mod.rerank(jnp.asarray(qb), jnp.asarray(cb),
-                                self.vectors, k=self.k)
-        sink.finish(take, np.asarray(out.ids)[:nq], np.asarray(out.dists)[:nq])
+        db = np.full((b, sink.part_d.shape[1]), np.inf, np.float32)
+        db[:nq] = sink.part_d[take]
+        out_ids, out_d = self._merge_fn(jnp.asarray(cb), jnp.asarray(db))
+        sink.finish(take, np.asarray(out_ids)[:nq], np.asarray(out_d)[:nq])
         merge_sizes.append(nq)
         return True
 

@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["unpack_bits", "binary_ip_rank_ref", "cluster_scan_ref"]
+__all__ = ["unpack_bits", "binary_ip_rank_ref", "cluster_scan_ref",
+           "topk_select_ref", "merge_topk_ref"]
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 
@@ -57,3 +58,53 @@ def cluster_scan_ref(codes: jax.Array, f_add: jax.Array, lut: jax.Array,
     order = jnp.argsort(r, stable=True)
     ids = order[:ef].astype(jnp.int32)
     return ids, r[ids]
+
+
+def topk_select_ref(cand_ids: jax.Array, dists: jax.Array, *, k: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Fused dedup + k-selection over per-query candidate rows.
+
+    cand_ids (Q, C) int32 (-1 = pad, duplicates allowed), dists (Q, C) f32.
+    Keeps the FIRST occurrence of each id (pads and later duplicates are
+    masked to inf), then takes the k smallest distances per row; ties broken
+    by lower column (``lax.top_k`` order). Returns (ids (Q, k) int32 with -1
+    where the distance is non-finite, dists (Q, k) f32).
+
+    Dedup is one stable argsort plus one scatter: equal ids group together
+    with the earliest column first, adjacent-compare flags the rest of each
+    run, and scattering the flags through ``order`` applies the inverse
+    permutation directly (no second argsort).
+    """
+    order = jnp.argsort(cand_ids, axis=-1, stable=True)            # (Q, C)
+    sorted_ids = jnp.take_along_axis(cand_ids, order, axis=-1)
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros_like(sorted_ids[:, :1], bool),
+         sorted_ids[:, 1:] == sorted_ids[:, :-1]], axis=-1)        # (Q, C)
+    rows = jnp.arange(cand_ids.shape[0])[:, None]
+    dup = jnp.zeros(cand_ids.shape, bool).at[rows, order].set(dup_sorted)
+    bad = (cand_ids < 0) | dup
+    d = jnp.where(bad, jnp.inf, dists)
+
+    neg, pos = jax.lax.top_k(-d, k)
+    ids = jnp.take_along_axis(cand_ids, pos, axis=-1)
+    out_d = -neg
+    ids = jnp.where(jnp.isfinite(out_d), ids, -1)
+    return ids.astype(jnp.int32), out_d.astype(jnp.float32)
+
+
+def merge_topk_ref(part_ids: jax.Array, part_dists: jax.Array, *, k: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Merge per-shard partial top-k runs into the global top-k.
+
+    part_ids (Q, O*k) int32 / part_dists (Q, O*k) f32: O concatenated
+    length-k runs per query, each already sorted ascending, ids DISJOINT
+    across runs (the sharded tier's cluster partition guarantees this), -1 /
+    inf in unfilled slots. No dedup and no distance recompute — selection
+    only; ties broken by lower column. Returns (ids (Q, k), dists (Q, k)),
+    ids -1 wherever the merged distance is non-finite.
+    """
+    neg, pos = jax.lax.top_k(-part_dists, k)
+    ids = jnp.take_along_axis(part_ids, pos, axis=-1)
+    out_d = -neg
+    ids = jnp.where(jnp.isfinite(out_d), ids, -1)
+    return ids.astype(jnp.int32), out_d.astype(jnp.float32)

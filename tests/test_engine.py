@@ -141,3 +141,67 @@ def test_rerank_dedup_no_quadratic_intermediate():
             shape = getattr(var.aval, "shape", ())
             assert np.prod(shape, dtype=np.int64) <= Q * C * D, (
                 eqn.primitive, shape)
+
+
+def test_adaptive_keep_mask_ladder_and_floor():
+    """The difficulty predictor: prefix masks, min-probe floor, and
+    round-UP-to-rung ladder quantization (capped at the top rung)."""
+    from repro.core.ivf import adaptive_keep_mask
+    d = jnp.asarray([
+        [1.0, 10.0, 11.0, 12.0],   # easy: big margin -> 1 useful probe
+        [1.0, 1.5, 1.8, 12.0],     # medium: 3 within tau=2
+        [1.0, 1.1, 1.2, 1.3],      # hard: all 4 within tau
+        [0.0, 0.0, 5.0, 6.0],      # zero-distance: d<=tau*0 keeps the ties
+    ], jnp.float32)
+    m = np.asarray(adaptive_keep_mask(d, tau=2.0))
+    np.testing.assert_array_equal(
+        m, [[1, 0, 0, 0], [1, 1, 1, 0], [1, 1, 1, 1], [1, 1, 0, 0]])
+    # floor: never below min_probes
+    m2 = np.asarray(adaptive_keep_mask(d, tau=2.0, min_probes=2))
+    assert (m2.sum(-1) >= 2).all()
+    # ladder: counts round UP to the next rung; top rung caps
+    m3 = np.asarray(adaptive_keep_mask(d, tau=2.0, ladder=(2, 3)))
+    np.testing.assert_array_equal(m3.sum(-1), [2, 3, 3, 2])
+    # masks are always prefixes (probe dists ascend)
+    for row in m3:
+        assert (np.diff(row.astype(int)) <= 0).all()
+
+
+def test_search_config_adaptive_validation():
+    from repro.core.engine import SearchConfig
+    # defaults stay off and untouched configs still construct
+    assert SearchConfig().adaptive_tau == 0.0
+    # list ladders normalize to tuples (hashable for jit static args)
+    assert SearchConfig(adaptive_ladder=[2, 4]).adaptive_ladder == (2, 4)
+    with pytest.raises(ValueError, match="adaptive_tau"):
+        SearchConfig(adaptive_tau=-0.5)
+    with pytest.raises(ValueError, match="adaptive_min_probes"):
+        SearchConfig(adaptive_min_probes=0)
+    with pytest.raises(ValueError, match="adaptive_ladder"):
+        SearchConfig(adaptive_ladder=(4, 2))
+    with pytest.raises(ValueError, match="adaptive_ladder"):
+        SearchConfig(adaptive_ladder=(0, 2))
+
+
+def test_adaptive_search_off_is_bit_identical(rng):
+    """tau=0 (the default) must leave the search graph untouched: results
+    bit-identical to a config without the adaptive fields set."""
+    from repro.core import compact_index
+    from repro.core.engine import PIMCQGEngine, SearchConfig
+    from repro.data.synthetic import clustered_vectors, query_set
+    x, _ = clustered_vectors(11, 1200, 16, 6)
+    q = query_set(11, x, 9)
+    icfg = compact_index.IndexConfig(dim=16, n_clusters=6, degree=8,
+                                     knn_k=12)
+    base = PIMCQGEngine.build(jax.random.PRNGKey(3), x, icfg,
+                              SearchConfig(nprobe=3, ef=12, k=4), n_shards=2)
+    off = PIMCQGEngine.build(jax.random.PRNGKey(3), x, icfg,
+                             SearchConfig(nprobe=3, ef=12, k=4,
+                                          adaptive_tau=0.0,
+                                          adaptive_ladder=(1, 3)),
+                             n_shards=2)
+    r1, _ = base.search(q)
+    r2, _ = off.search(q)
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    np.testing.assert_array_equal(np.asarray(r1.dists),
+                                  np.asarray(r2.dists))

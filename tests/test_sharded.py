@@ -5,8 +5,8 @@ Pins the two contracts the tier is built on:
   * PARITY — ``search_probed`` over the cluster_filter probes is
     bit-identical to ``search``, and a ShardedFleet's merged results are
     bit-identical to a single engine searching the same probed clusters
-    (clusters partition the corpus; exact distances are recomputed at the
-    origin merge through the same sort-based rerank path).
+    (clusters partition the corpus; the shards' exact-reranked partials
+    are merged at the origin by selection alone — ``kernels.ops.merge_topk``).
 
   * PLACEMENT — ``partition_engine`` slices are disjoint and cover all
     clusters, and ``greedy_place`` never exceeds a feasible per-shard

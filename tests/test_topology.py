@@ -376,3 +376,102 @@ def test_facades_delegate_to_serving_topology(eng_q):
     sync, _ = eng.search(q)
     np.testing.assert_array_equal(fleet.run(q).ids, np.asarray(sync.ids))
     np.testing.assert_array_equal(sharded.run(q).ids, np.asarray(sync.ids))
+
+
+# ---------------------------------------------------------------------------
+# gather stage: variable per-query fanout (the adaptive path's common case)
+# ---------------------------------------------------------------------------
+
+def test_finish_partial_variable_fanout():
+    """ShardedSink.finish_partial with UNEVEN owner counts: queries whose
+    probes touch 1, 2 and 3 shards gather into slot-major runs, count down
+    independently, and become ready exactly when their own last shard
+    answers — regardless of deposit order."""
+    from repro.core.topology import ShardedSink
+    k, fanout, n = 3, 3, 4
+    sink = ShardedSink(np.zeros((n, 8), np.float32), np.zeros(n), k, fanout)
+    sink.pending[:] = [1, 3, 2, 2]
+
+    def runs(shard):        # distinct, recognizable per-(query,shard) runs
+        ids = np.arange(k, dtype=np.int32)[None, :]
+        return (lambda idxs: (100 * shard + 10 * idxs[:, None] + ids,
+                              (shard + 1.0) * np.ones((len(idxs), k),
+                                                      np.float32)))
+
+    # shard 0 answers queries {0, 1, 2} at their slot 0
+    sink.finish_partial(np.array([0, 1, 2]), np.array([0, 0, 0]),
+                        *runs(0)(np.array([0, 1, 2])))
+    assert [int(i) for i, _ in sink.ready] == [0]     # fanout-1 query done
+    # shard 1 answers {1, 3} (query 3's FIRST slot is shard 1's answer)
+    sink.finish_partial(np.array([1, 3]), np.array([1, 0]),
+                        *runs(1)(np.array([1, 3])))
+    assert [int(i) for i, _ in sink.ready] == [0]
+    # shard 2 answers {1, 2, 3} — queries 1 (3rd of 3), 2 (2nd of 2),
+    # 3 (2nd of 2) all complete in this deposit
+    sink.finish_partial(np.array([1, 2, 3]), np.array([2, 1, 1]),
+                        *runs(2)(np.array([1, 2, 3])))
+    assert [int(i) for i, _ in sink.ready] == [0, 1, 2, 3]
+    assert (sink.pending == 0).all()
+    # slot-major layout: query 1 filled slots 0,1,2; query 2 slots 0,1 from
+    # shards 0,2; unfilled tails stay (-1, inf)
+    np.testing.assert_array_equal(
+        sink.part_ids[1], np.concatenate([100 * s + 10 * 1 + np.arange(3)
+                                          for s in (0, 1, 2)]))
+    np.testing.assert_array_equal(
+        sink.part_ids[2][:2 * k],
+        np.concatenate([10 * 2 + np.arange(3), 200 + 10 * 2 + np.arange(3)]))
+    assert (sink.part_ids[2][2 * k:] == -1).all()
+    assert np.isinf(sink.part_d[2][2 * k:]).all()
+    assert (sink.part_ids[0][k:] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# adaptive early termination (SearchConfig.adaptive_*)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def adaptive_eng_q():
+    x, _ = clustered_vectors(5, 2000, 32, 8)
+    q = query_set(5, x, 37)
+    icfg = compact_index.IndexConfig(dim=32, n_clusters=8, degree=8,
+                                     knn_k=16)
+    scfg = engine.SearchConfig(nprobe=4, ef=16, k=5, adaptive_tau=2.0,
+                               adaptive_ladder=(2, 4))
+    eng = engine.PIMCQGEngine.build(jax.random.PRNGKey(1), x, icfg, scfg,
+                                    n_shards=2)
+    return eng, q
+
+
+def test_adaptive_topology_matches_adaptive_single_engine(adaptive_eng_q):
+    """With termination ON, the sharded scatter masks exactly the probes
+    the single adaptive engine masks — results stay bit-identical (ids)
+    between the fleet and one engine at the same adaptive config."""
+    eng, q = adaptive_eng_q
+    sync, _ = eng.search(q)
+    topo = topology(eng, shards=2, replicas=1, buckets=(8, 16),
+                    fill_threshold=16, wait_limit_s=1e-3)
+    rep = topo.run(q)
+    np.testing.assert_array_equal(rep.ids, np.asarray(sync.ids))
+    np.testing.assert_allclose(rep.dists, np.asarray(sync.dists),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_adaptive_reduces_fanout(adaptive_eng_q):
+    """Easy queries keep fewer probes, so the mean shard fanout drops
+    strictly below the fixed-effort scatter's."""
+    eng, q = adaptive_eng_q
+    fixed = engine.PIMCQGEngine.build(
+        jax.random.PRNGKey(1),
+        np.asarray(eng.host.vectors),
+        compact_index.IndexConfig(dim=32, n_clusters=8, degree=8, knn_k=16),
+        engine.SearchConfig(nprobe=4, ef=16, k=5), n_shards=2)
+    t_fix = topology(fixed, shards=2, replicas=1, buckets=(8, 16),
+                     fill_threshold=16, wait_limit_s=1e-3)
+    t_ad = topology(eng, shards=2, replicas=1, buckets=(8, 16),
+                    fill_threshold=16, wait_limit_s=1e-3)
+    assert (t_ad.adaptive_tau, t_ad.adaptive_ladder) == (2.0, (2, 4))
+    rep_f, rep_a = t_fix.run(q), t_ad.run(q)
+    assert rep_a.fanout_mean < rep_f.fanout_mean
+    # at equal effort ladder top == nprobe, results can only differ where
+    # probes were dropped; recall parity is gated in benchmarks/qps_recall
+    assert rep_a.n_shed == 0 and rep_a.n_unrouted == 0
