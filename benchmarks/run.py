@@ -22,6 +22,8 @@ Modules:
     streaming       §IV-B      bucketed streaming scheduler vs per-shape
     overload        ISSUE 3/5  serving tiers (replicated/sharded/hybrid)
                                under 0.5x..8x offered load + retry storm
+    tenancy         ISSUE 8    DWRR noisy-neighbor isolation + weighted
+                               goodput (real topology + simulator overlay)
     breakdown       Fig 14     five-stage pipeline breakdown
     mulfree_bench   Fig 17/9   shift-add kernel time + recall delta
     pim_baselines   Fig 13     IVF-PQ recall ceiling vs PIMCQG
@@ -45,6 +47,7 @@ MODULES = [
     ("fig16", "scheduling"),
     ("stream", "streaming"),
     ("overload", "overload"),
+    ("tenancy", "tenancy"),
     ("fig14", "breakdown"),
     ("fig17", "mulfree_bench"),
     ("fig13", "pim_baselines"),

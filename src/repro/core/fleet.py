@@ -43,11 +43,13 @@ import numpy as np
 
 from .pipeline import StageCosts
 from .topology import (AdmissionController, ReplicaGroup, ServingTopology,
-                       ShardGroup, ShardWorker, ShardedSink, TopologyReport,
-                       partition_index, replicate_engine, topology)
+                       ShardGroup, ShardWorker, ShardedSink, TenantSpec,
+                       TopologyReport, partition_index, replicate_engine,
+                       topology)
 
 __all__ = ["FleetScheduler", "FleetReport", "replicate_engine",
-           "ShardedFleet", "ShardedReport", "partition_engine", "topology"]
+           "ShardedFleet", "ShardedReport", "partition_engine", "topology",
+           "TenantSpec"]
 
 ROUTE_POLICIES = ("round-robin", "least-in-flight")
 
@@ -76,6 +78,9 @@ class FleetReport:
     makespan_s: float
     route: str
     backend: str = ""
+    tenants: dict = dataclasses.field(default_factory=dict)  # per-tenant
+    # accounting (ISSUE 8); appended with a default so positional
+    # construction in older callers keeps working
 
 
 class FleetScheduler:
@@ -91,7 +96,8 @@ class FleetScheduler:
                  fill_threshold: int | None = None, wait_limit_s: float = 2e-3,
                  fifo_depth: int = 4, max_batch: int = 64,
                  admission_depth: int | None = None,
-                 shed_deadline_s: float | None = None):
+                 shed_deadline_s: float | None = None,
+                 tenants=None):
         if not engines:
             raise ValueError("FleetScheduler needs at least one engine")
         self._topo = ServingTopology(
@@ -100,7 +106,7 @@ class FleetScheduler:
             fifo_depth=fifo_depth, max_batch=max_batch,
             admission_depth="auto" if admission_depth is None
             else admission_depth,
-            shed_deadline_s=shed_deadline_s)
+            shed_deadline_s=shed_deadline_s, tenants=tenants)
         self.engines = list(engines)
         self.route = route
         self.buckets = self._topo.buckets
@@ -110,10 +116,12 @@ class FleetScheduler:
         self.shed_deadline_s = self._topo.shed_deadline_s
         self.admission_depth = self._topo.admission_depth
 
-    def run(self, queries, arrival_times=None) -> FleetReport:
+    def run(self, queries, arrival_times=None, tenant=None) -> FleetReport:
         """Replay a (possibly timed) stream through the fleet; see
-        StreamingScheduler.run for the arrival-replay semantics."""
-        r = self._topo.run(queries, arrival_times)
+        StreamingScheduler.run for the arrival-replay semantics (and
+        ServingTopology.run for ``tenant`` tagging against a registry
+        passed at construction)."""
+        r = self._topo.run(queries, arrival_times, tenant=tenant)
         per_engine = [{k: d[k] for k in ("engine", "flushes", "queries",
                                          "max_in_flight", "compiles")}
                       for d in r.per_engine]
@@ -124,7 +132,7 @@ class FleetScheduler:
             n_queries=r.n_queries, n_admitted=r.n_admitted, n_shed=r.n_shed,
             n_flushes=r.n_flushes, flush_sizes=r.flush_sizes,
             per_engine=per_engine, makespan_s=r.makespan_s, route=r.route,
-            backend=r.backends[0])
+            backend=r.backends[0], tenants=r.tenants)
 
 
 # ---------------------------------------------------------------------------

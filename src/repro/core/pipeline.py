@@ -190,6 +190,10 @@ class SimReport:
                                          # weighted by batch size)
     n_reissued: int = 0       # hedged speculative re-dispatches (search)
     n_duplicate_drops: int = 0  # hedged completions that lost the race
+    # tenant-labeled streams only (ISSUE 8): tid -> value
+    tenant_queries: dict = dataclasses.field(default_factory=dict)
+    tenant_shed: dict = dataclasses.field(default_factory=dict)
+    tenant_p99_s: dict = dataclasses.field(default_factory=dict)
 
 
 class EventSimulator:
@@ -223,8 +227,21 @@ class EventSimulator:
     # the concurrency structure of Fig 8 (async pipeline).
     def _run_batches(self, batches, shed_deadline_s: float | None = None,
                      retry: RetryPolicy | None = None,
-                     pu_speed=None, hedge=None, hedge_groups=None):
+                     pu_speed=None, hedge=None, hedge_groups=None,
+                     tenant_of_batch=None, tenant_weights=None,
+                     tenant_deadline_s=None):
         """batches: list of (pu, n_queries, ready_time); returns SimReport.
+
+        With ``tenant_of_batch`` (one tenant id per batch), host prep is
+        scheduled deficit-weighted-round-robin across per-tenant queues
+        instead of FCFS — the deterministic mirror of the serving tier's
+        tenant-aware AdmissionController. ``tenant_weights`` sets the
+        DWRR quanta (default: equal); ``tenant_deadline_s`` (one per
+        tenant, None entries fall back to ``shed_deadline_s``) sheds a
+        batch whose prep could not start within ITS tenant's deadline.
+        Per-tenant completions/sheds/p99 land in the SimReport's
+        ``tenant_*`` dicts. Tenant mode composes with shedding only
+        (retry/hedge raise).
 
         With ``shed_deadline_s`` set, a batch whose host prep could not
         start within the deadline of its ready time is shed (admission-time
@@ -284,6 +301,49 @@ class EventSimulator:
         end = 0.0
         limit = self.fifo_depth * self.n_pus
 
+        tmode = tenant_of_batch is not None
+        if tmode:
+            if retry is not None or hedge is not None:
+                raise ValueError("tenant-labeled streams compose with "
+                                 "shedding, not retry/hedge")
+            tenant_of_batch = [int(t) for t in tenant_of_batch]
+            if len(tenant_of_batch) != len(batches):
+                raise ValueError(
+                    f"tenant_of_batch has {len(tenant_of_batch)} entries "
+                    f"for {len(batches)} batches")
+            T = (max(tenant_of_batch) + 1) if tenant_of_batch else 1
+            tw = np.ones(T) if tenant_weights is None \
+                else np.asarray(tenant_weights, np.float64)
+            if len(tw) < T or not (tw > 0).all():
+                raise ValueError(f"need {T} positive tenant weights, "
+                                 f"got {tenant_weights}")
+            T = len(tw)
+            tdl = [shed_deadline_s] * T if tenant_deadline_s is None \
+                else [shed_deadline_s if d is None else d
+                      for d in tenant_deadline_s]
+            quantum = tw / tw.min()
+            deficit = np.zeros(T)
+            cur = [None]                   # DWRR rotation position
+            tq = [deque() for _ in range(T)]   # batch idxs awaiting prep
+            t_shed = np.zeros(T, np.int64)
+
+            def dwrr_pick():
+                if not any(len(q) for q in tq):
+                    return None
+                for _ in range(2 * T + 1):
+                    c0 = cur[0]
+                    if c0 is not None and tq[c0] and deficit[c0] >= 1.0:
+                        return c0
+                    nxt = 0 if c0 is None else (c0 + 1) % T
+                    cur[0] = nxt
+                    if tq[nxt]:
+                        deficit[nxt] = min(deficit[nxt] + quantum[nxt],
+                                           quantum[nxt] + 1.0)
+                    else:
+                        deficit[nxt] = 0.0
+                raise AssertionError("DWRR rotation found no backlogged "
+                                     "tenant it proved exists")
+
         def duration(stage, pu, n):
             if stage == 0:
                 return c.t_pre(n)
@@ -297,8 +357,47 @@ class EventSimulator:
 
         while ev:
             ready, i, stage = heapq.heappop(ev)
+            if stage == -1:               # tenant-mode prep gate (drain)
+                t_now = ready
+                if free["prep"] > t_now:
+                    heapq.heappush(ev, (free["prep"], -1, -1))
+                    continue
+                while True:
+                    tid = dwrr_pick()
+                    if tid is None:
+                        break
+                    if inflight >= limit:
+                        break             # a completion re-opens the gate
+                    j = tq[tid].popleft()
+                    pu_j, n_j, _ = batches[j]
+                    if tdl[tid] is not None \
+                            and t_now - arrival_of[j] > tdl[tid]:
+                        # expiry spends NO deficit — the controller's
+                        # expire() drops stale heads before dealing, so a
+                        # backlogged low-weight tenant sheds its stale tail
+                        # without burning its service share on it
+                        n_shed += n_j
+                        t_shed[tid] += n_j
+                        continue          # server still free: keep picking
+                    deficit[tid] -= 1.0
+                    inflight += 1
+                    dur = duration(0, pu_j, n_j)
+                    free["prep"] = t_now + dur
+                    busy["prep"] += dur
+                    heapq.heappush(ev, (free["prep"], j, 1))
+                    if any(len(q) for q in tq):
+                        heapq.heappush(ev, (free["prep"], -1, -1))
+                    break
+                continue
             pu, n, arrival = batches[i]
             if stage == 0:
+                if tmode:
+                    # prep order is decided at server-free time by DWRR,
+                    # not by FCFS arrival: park in the tenant queue and
+                    # schedule a drain
+                    tq[tenant_of_batch[i]].append(i)
+                    heapq.heappush(ev, (max(ready, free["prep"]), -1, -1))
+                    continue
                 if shed_deadline_s is not None \
                         and max(ready, free["prep"]) - arrival_of[i] \
                         > shed_deadline_s:
@@ -387,6 +486,9 @@ class EventSimulator:
                 if gate_wait:
                     j, jready = gate_wait.popleft()
                     heapq.heappush(ev, (max(jready, tdone), j, 0))
+                if tmode and any(len(q) for q in tq):
+                    # the freed in-flight slot re-opens the prep gate
+                    heapq.heappush(ev, (max(tdone, free["prep"]), -1, -1))
 
         offered = sum(n for _, n, _ in batches)
         nq = sum(batches[i][1] for i in done_t)   # measured, not offered-shed
@@ -396,6 +498,22 @@ class EventSimulator:
         per_q_lat = np.repeat(
             [done_t[i] - batches[i][2] for i in done_t],
             [batches[i][1] for i in done_t]) if done_t else np.empty(0)
+        tenant_queries: dict = {}
+        tenant_shed: dict = {}
+        tenant_p99: dict = {}
+        if tmode:
+            per_lat: dict = {t: [] for t in range(T)}
+            done_q = np.zeros(T, np.int64)
+            for i in done_t:
+                tid = tenant_of_batch[i]
+                done_q[tid] += batches[i][1]
+                per_lat[tid].extend([done_t[i] - batches[i][2]]
+                                    * batches[i][1])
+            tenant_queries = {t: int(done_q[t]) for t in range(T)}
+            tenant_shed = {t: int(t_shed[t]) for t in range(T)}
+            tenant_p99 = {t: (float(np.percentile(per_lat[t], 99))
+                              if per_lat[t] else float("nan"))
+                          for t in range(T)}
         return SimReport(qps=nq / end if end > 0 else 0.0,
                          mean_latency_s=lat,
                          stage_busy={k: v / end for k, v in busy.items()}
@@ -409,7 +527,10 @@ class EventSimulator:
                          n_reissued=hedge.reissued_total
                          if hedge is not None else 0,
                          n_duplicate_drops=hedge.duplicate_results
-                         if hedge is not None else 0)
+                         if hedge is not None else 0,
+                         tenant_queries=tenant_queries,
+                         tenant_shed=tenant_shed,
+                         tenant_p99_s=tenant_p99)
 
     # -- policies -------------------------------------------------------------
     def per_query(self, n_queries: int, pu_of_query=None) -> SimReport:
@@ -465,7 +586,9 @@ class EventSimulator:
     def dynamic(self, arrival_times: np.ndarray, pu_of_query: np.ndarray,
                 threshold: int, wait_limit_s: float,
                 shed_deadline_s: float | None = None,
-                retry: RetryPolicy | None = None) -> SimReport:
+                retry: RetryPolicy | None = None,
+                tenant_of=None, tenant_weights=None,
+                tenant_deadline_s=None) -> SimReport:
         """Fig 7(c): per-PU buffers; flush on fill OR oldest-query timeout.
 
         ``shed_deadline_s`` enables the fleet tier's admission-deadline
@@ -473,36 +596,59 @@ class EventSimulator:
         goodput plateau the real FleetScheduler measures under overload;
         ``retry`` adds the shed-aware client model on top (shed batches
         re-offered after backoff, ``SimReport.n_retries``) — the
-        retry-storm-vs-plateau overlay in benchmarks/overload.py."""
-        order = np.argsort(arrival_times)
-        buf: dict[int, list] = {p: [] for p in range(self.n_pus)}
-        oldest: dict[int, float] = {}
-        batches = []
+        retry-storm-vs-plateau overlay in benchmarks/overload.py.
 
-        def flush(pu, now):
-            if buf[pu]:
-                batches.append((pu, len(buf[pu]), now))
-                buf[pu] = []
-                oldest.pop(pu, None)
+        ``tenant_of`` (one tenant id per query) labels the arrival stream:
+        buffers become per-(PU, tenant) so every flush is tenant-pure, and
+        prep is scheduled DWRR across tenants with ``tenant_weights`` /
+        per-tenant ``tenant_deadline_s`` (see ``_run_batches``) — the
+        deterministic harness for the serving tier's noisy-neighbor
+        isolation claims (benchmarks/tenancy.py)."""
+        order = np.argsort(arrival_times)
+        if tenant_of is None:
+            key_of = lambda i: int(pu_of_query[i])
+        else:
+            tenant_of = np.asarray(tenant_of)
+            key_of = lambda i: (int(pu_of_query[i]), int(tenant_of[i]))
+        buf: dict = {}
+        oldest: dict = {}
+        batches = []
+        batch_tenant = []
+
+        def flush(key, now):
+            if buf.get(key):
+                pu = key if tenant_of is None else key[0]
+                batches.append((pu, len(buf[key]), now))
+                if tenant_of is not None:
+                    batch_tenant.append(key[1])
+                buf[key] = []
+                oldest.pop(key, None)
 
         for i in order:
             now = float(arrival_times[i])
             # timeout flushes due before this arrival, at their fire times
-            for pu in list(oldest):
-                if now - oldest[pu] >= wait_limit_s:
-                    flush(pu, oldest[pu] + wait_limit_s)
-            pu = int(pu_of_query[i])
-            buf[pu].append(i)
-            oldest.setdefault(pu, now)
-            if len(buf[pu]) >= threshold:
-                flush(pu, now)
+            for key in list(oldest):
+                if now - oldest[key] >= wait_limit_s:
+                    flush(key, oldest[key] + wait_limit_s)
+            key = key_of(i)
+            buf.setdefault(key, []).append(i)
+            oldest.setdefault(key, now)
+            if len(buf[key]) >= threshold:
+                flush(key, now)
         # end of stream: residual buffers still fire at their true deadline
         # (oldest arrival + wait limit), which may be after the last arrival
         # — nothing flushes "at tend" just because the trace ran out
-        for pu in sorted(oldest):
-            flush(pu, oldest[pu] + wait_limit_s)
-        batches.sort(key=lambda b: b[2])
-        return self._run_batches(batches, shed_deadline_s, retry)
+        for key in sorted(oldest):
+            flush(key, oldest[key] + wait_limit_s)
+        if tenant_of is None:
+            batches.sort(key=lambda b: b[2])
+            return self._run_batches(batches, shed_deadline_s, retry)
+        ob = sorted(range(len(batches)), key=lambda j: batches[j][2])
+        return self._run_batches(
+            [batches[j] for j in ob], shed_deadline_s, retry,
+            tenant_of_batch=[batch_tenant[j] for j in ob],
+            tenant_weights=tenant_weights,
+            tenant_deadline_s=tenant_deadline_s)
 
 
 # ---------------------------------------------------------------------------
@@ -561,7 +707,8 @@ class StreamSink:
         self.out_ids = np.full((n, k), -1, np.int32)
         self.out_d = np.full((n, k), np.inf, np.float32)
         self.lat = np.full(n, np.nan)
-        self._t0 = time.perf_counter()
+        self.on_finish = None   # optional callback(idxs) at completion —
+        self._t0 = time.perf_counter()  # e.g. per-tenant credit release
 
     def now(self) -> float:
         return time.perf_counter() - self._t0
@@ -571,6 +718,8 @@ class StreamSink:
         self.out_ids[idxs] = ids
         self.out_d[idxs] = dists
         self.lat[idxs] = tc - self.arr[idxs]
+        if self.on_finish is not None:
+            self.on_finish(idxs)
 
 
 class EngineWorker:

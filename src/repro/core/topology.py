@@ -74,10 +74,11 @@ from ..distributed.straggler import DeadlineReissue, HedgeConfig
 
 __all__ = ["AdmissionController", "ReplicaGroup", "ShardGroup",
            "ShardWorker", "ShardedSink", "ServingTopology", "TopologyReport",
-           "MeshShardWorker", "MeshShardGroup", "ShardHedge",
+           "MeshShardWorker", "MeshShardGroup", "ShardHedge", "TenantSpec",
            "replicate_engine", "partition_index", "topology"]
 
 ROUTE_POLICIES = ("round-robin", "least-in-flight")
+SHED_POLICIES = ("drop-new", "drop-old")
 
 
 # ---------------------------------------------------------------------------
@@ -162,52 +163,243 @@ def partition_index(eng, n_parts: int, *, mem_budget: int | None = None,
 
 
 # ---------------------------------------------------------------------------
-# admission control (extracted from FleetScheduler, PR 3 — behavior pinned)
+# admission control (extracted from FleetScheduler, PR 3 — behavior pinned;
+# generalized to tenant-aware DWRR in ISSUE 8: one tenant is the old FIFO)
 # ---------------------------------------------------------------------------
 
-class AdmissionController:
-    """Bounded admission queue + deadline shedding in front of a tier tree.
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's contract with the serving tier.
 
-    ``offer`` admits an arrival into the FIFO unless the queue is full
-    (``depth`` entries; None = unbounded) — a full queue sheds the arrival
-    immediately. ``expire`` drops queries at the HEAD of the queue whose
-    wait has reached ``deadline_s`` (the queue is arrival-ordered, so the
-    head is always the oldest): every query that IS dealt downstream
-    started within its deadline. Credit-based backpressure is the other
-    half of the contract, but it lives in the tier nodes (``room()``) —
-    the controller only holds what the tree refuses."""
+    ``weight`` sets the DWRR share under contention (quanta are weights
+    normalized so the lightest tenant replenishes 1 per round).
+    ``queue_depth``/``deadline_s``/``credits`` bound, respectively, how
+    many of the tenant's queries may wait at admission (None = the tier's
+    global depth; 0 = admit nothing), how long one may wait before it is
+    shed, and how many may be dealt-but-unfinished at once (in-service
+    quota — a tenant at its quota stops being dealable until completions
+    release credits via ``StreamSink.on_finish``). ``shed_policy``
+    chooses the overflow victim: ``drop-new`` sheds the arrival (the
+    legacy behavior), ``drop-old`` evicts the tenant's oldest waiter to
+    make room. ``backend`` pins the tenant to shards declaring that
+    RankingBackend mode; ``k``/``nprobe``/``adaptive_tau`` (+
+    ``adaptive_min_probes``) override the engines' search effort for this
+    tenant's queries only — nprobe/tau apply at the sharded origin
+    scatter, k truncates the tenant's result rows everywhere."""
+
+    name: str
+    weight: float = 1.0
+    queue_depth: int | None = None
+    deadline_s: float | None = None
+    credits: int | None = None
+    shed_policy: str = "drop-new"
+    backend: str | None = None
+    k: int | None = None
+    nprobe: int | None = None
+    adaptive_tau: float | None = None
+    adaptive_min_probes: int = 1
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("a tenant needs a non-empty name")
+        if not (isinstance(self.weight, (int, float)) and self.weight > 0):
+            raise ValueError(f"tenant {self.name!r}: weight must be > 0, "
+                             f"got {self.weight}")
+        if self.queue_depth is not None and self.queue_depth < 0:
+            raise ValueError(f"tenant {self.name!r}: queue_depth must be "
+                             f">= 0 or None, got {self.queue_depth}")
+        if self.deadline_s is not None and not self.deadline_s > 0:
+            raise ValueError(f"tenant {self.name!r}: deadline_s must be "
+                             f"> 0 or None, got {self.deadline_s}")
+        if self.credits is not None and self.credits < 1:
+            raise ValueError(f"tenant {self.name!r}: credits must be >= 1 "
+                             f"or None, got {self.credits}")
+        if self.shed_policy not in SHED_POLICIES:
+            raise ValueError(f"tenant {self.name!r}: shed_policy must be "
+                             f"one of {SHED_POLICIES}, "
+                             f"got {self.shed_policy!r}")
+        if self.k is not None and self.k < 1:
+            raise ValueError(f"tenant {self.name!r}: k must be >= 1 or "
+                             f"None, got {self.k}")
+        if self.nprobe is not None and self.nprobe < 1:
+            raise ValueError(f"tenant {self.name!r}: nprobe must be >= 1 "
+                             f"or None, got {self.nprobe}")
+        if self.adaptive_tau is not None and not self.adaptive_tau >= 0:
+            raise ValueError(f"tenant {self.name!r}: adaptive_tau must be "
+                             f">= 0 or None, got {self.adaptive_tau}")
+        if self.adaptive_min_probes < 1:
+            raise ValueError(f"tenant {self.name!r}: adaptive_min_probes "
+                             f"must be >= 1, got {self.adaptive_min_probes}")
+
+
+class AdmissionController:
+    """Bounded admission queue(s) + deadline shedding in front of a tier
+    tree, scheduled deficit-weighted-round-robin across tenants.
+
+    With no tenant registry (the default) there is ONE tenant and the
+    controller is exactly the PR 3 FIFO: ``offer`` admits an arrival
+    unless the queue is full (``depth`` entries; None = unbounded — a
+    full queue sheds the arrival immediately), ``expire`` drops queries
+    at the HEAD whose wait has reached ``deadline_s`` (each queue is
+    arrival-ordered, so its head is always the oldest): every query that
+    IS dealt downstream started within its deadline.
+
+    With ``tenants`` (a list of TenantSpec, ``tenant_of`` mapping each
+    query index to its tenant), each tenant gets its own bounded queue
+    and the dealing order is DWRR: each rotation visit banks
+    ``quantum = weight / min(weight)`` deficit (capped at quantum + 1 so
+    an idle-then-bursty tenant cannot hoard service; an EMPTY queue's
+    deficit resets to 0), one pop costs 1. Per-tenant ``deadline_s``
+    overrides the tier deadline in ``expire``/``next_deadline`` (each
+    queue's head is checked against ITS OWN deadline — the ISSUE 8
+    satellite fix); per-tenant ``credits`` cap dealt-but-unfinished
+    queries — ``pop`` takes a credit, ``release`` (wired to the sink's
+    completion hook) returns it, and a tenant at its cap is skipped by
+    the rotation without consuming deficit.
+
+    Tier-node credit backpressure is the other half of the contract, but
+    it lives in the tree (``room()``) — the controller only holds what
+    the tree refuses."""
 
     def __init__(self, depth: int | None, deadline_s: float | None,
-                 arrivals: np.ndarray):
+                 arrivals: np.ndarray, *, tenants=None, tenant_of=None):
         self.depth = depth
         self.deadline_s = deadline_s
         self.arr = arrivals
-        self.queue: deque = deque()       # query indices, arrival order
+        self.tenants: list[TenantSpec] = \
+            list(tenants) if tenants else [TenantSpec("default")]
+        T = len(self.tenants)
+        if tenant_of is None:
+            tenant_of = np.zeros(len(arrivals), np.int32)
+        self.tenant_of = np.asarray(tenant_of, np.int32)
+        if len(self.tenant_of) != len(arrivals):
+            raise ValueError(f"tenant_of has {len(self.tenant_of)} entries "
+                             f"for {len(arrivals)} arrivals")
+        self.queues: list[deque] = [deque() for _ in range(T)]
+        wmin = min(s.weight for s in self.tenants)
+        self.quanta = [s.weight / wmin for s in self.tenants]
+        self.deficit = [0.0] * T
+        self._cur: int | None = None      # DWRR rotation position
+        self.in_service = [0] * T         # dealt, completion not yet seen
+        self.max_in_service = [0] * T
+        self.dealt = [0] * T
+        self.evicted: deque = deque()     # drop-old victims awaiting shed
+        self._depth = [s.queue_depth if s.queue_depth is not None else depth
+                       for s in self.tenants]
+        self._deadline = [s.deadline_s if s.deadline_s is not None
+                          else deadline_s for s in self.tenants]
+
+    @property
+    def queue(self) -> deque:
+        """The single-tenant queue (back-compat introspection handle)."""
+        if len(self.queues) != 1:
+            raise AttributeError("multi-tenant controller has no single "
+                                 "queue; use .queues")
+        return self.queues[0]
 
     def __len__(self) -> int:
-        return len(self.queue)
+        return sum(len(q) for q in self.queues)
 
     def offer(self, idx: int) -> bool:
-        """Admit an arrival; False = queue full, shed immediately."""
-        if self.depth is not None and len(self.queue) >= self.depth:
+        """Admit an arrival; False = its tenant's queue is full, shed
+        immediately (``drop-new``) — under ``drop-old`` the tenant's
+        oldest waiter is evicted instead (drain via ``drain_evicted``)
+        and the arrival is admitted."""
+        tid = int(self.tenant_of[idx])
+        q = self.queues[tid]
+        d = self._depth[tid]
+        if d is not None and len(q) >= d:
+            if self.tenants[tid].shed_policy == "drop-old" and q:
+                self.evicted.append(q.popleft())
+                q.append(idx)
+                return True
             return False
-        self.queue.append(idx)
+        q.append(idx)
         return True
 
+    def drain_evicted(self) -> list[int]:
+        """Queries evicted by drop-old offers since the last drain."""
+        out = list(self.evicted)
+        self.evicted.clear()
+        return out
+
     def expire(self, t: float) -> list[int]:
-        """Pop (to shed) every head-of-queue query past its deadline."""
+        """Pop (to shed) every head-of-queue query past ITS OWN deadline
+        (each tenant's queue head is checked against that tenant's
+        deadline, falling back to the tier-wide one)."""
         out: list[int] = []
-        if self.deadline_s is not None:
-            while self.queue \
-                    and t - self.arr[self.queue[0]] >= self.deadline_s:
-                out.append(self.queue.popleft())
+        for tid, q in enumerate(self.queues):
+            dl = self._deadline[tid]
+            if dl is None:
+                continue
+            while q and t - self.arr[q[0]] >= dl:
+                out.append(q.popleft())
         return out
 
     def next_deadline(self) -> float:
-        """When the current head would be shed (inf if nothing can be)."""
-        if self.deadline_s is None or not self.queue:
-            return math.inf
-        return float(self.arr[self.queue[0]]) + self.deadline_s
+        """Earliest instant any queue head would be shed (inf if none)."""
+        nxt = math.inf
+        for tid, q in enumerate(self.queues):
+            dl = self._deadline[tid]
+            if dl is not None and q:
+                nxt = min(nxt, float(self.arr[q[0]]) + dl)
+        return nxt
+
+    # -- DWRR dealing ---------------------------------------------------------
+    def _dealable(self, tid: int) -> bool:
+        s = self.tenants[tid]
+        return bool(self.queues[tid]) and (
+            s.credits is None or self.in_service[tid] < s.credits)
+
+    def peek(self) -> int | None:
+        """The query DWRR would deal next, WITHOUT committing it (None =
+        nothing dealable: every nonempty queue is at its credit cap).
+        Idempotent — once a candidate is found the rotation parks on it,
+        so repeated peeks (and the peek inside ``pop``) return the same
+        query without banking extra deficit."""
+        T = len(self.queues)
+        if not any(self._dealable(t) for t in range(T)):
+            return None
+        # visiting a dealable tenant at least twice guarantees deficit >= 1
+        # (each visit banks quantum >= 1), so 2T+1 steps always terminate
+        for _ in range(2 * T + 1):
+            cur = self._cur
+            if cur is not None and self._dealable(cur) \
+                    and self.deficit[cur] >= 1.0:
+                return int(self.queues[cur][0])
+            nxt = 0 if cur is None else (cur + 1) % T
+            self._cur = nxt
+            if self._dealable(nxt):
+                # cap banking at one extra pop so a blocked-then-released
+                # tenant cannot hoard an unbounded burst
+                self.deficit[nxt] = min(self.deficit[nxt] + self.quanta[nxt],
+                                        self.quanta[nxt] + 1.0)
+            elif not self.queues[nxt]:
+                self.deficit[nxt] = 0.0   # no banking while idle (DWRR rule)
+        raise AssertionError("DWRR rotation failed to find a dealable "
+                             "tenant it proved exists")
+
+    def pop(self) -> int | None:
+        """Commit the peeked query: pop it, spend 1 deficit, take an
+        in-service credit. None = nothing dealable."""
+        idx = self.peek()
+        if idx is None:
+            return None
+        tid = self._cur
+        assert self.queues[tid][0] == idx
+        self.queues[tid].popleft()
+        self.deficit[tid] -= 1.0
+        self.in_service[tid] += 1
+        self.max_in_service[tid] = max(self.max_in_service[tid],
+                                       self.in_service[tid])
+        self.dealt[tid] += 1
+        return idx
+
+    def release(self, idxs):
+        """Return in-service credits on completion (the StreamSink
+        ``on_finish`` hook)."""
+        for i in np.atleast_1d(np.asarray(idxs)):
+            self.in_service[int(self.tenant_of[int(i)])] -= 1
 
 
 # ---------------------------------------------------------------------------
@@ -252,16 +444,19 @@ class ReplicaGroup:
 
     # -- intake -------------------------------------------------------------
     def deal(self, admission: AdmissionController, quantum: int):
-        """Deal queries from the admission queue to children in flush-sized
-        chunks; stops when every child is out of credits (the queries wait
+        """Deal queries from the admission queues (DWRR order) to children
+        in flush-sized chunks; stops when every child is out of credits OR
+        every waiting tenant is at its in-service quota (the queries wait
         upstream — credit-based backpressure)."""
-        q = admission.queue
-        while q:
+        while len(admission):
             w = self._pick()
             if w is None:
                 return
-            for _ in range(min(w.room(), quantum, len(q))):
-                w.submit(q.popleft())
+            for _ in range(min(w.room(), quantum, len(admission))):
+                idx = admission.pop()
+                if idx is None:
+                    return                # waiting tenants all credit-capped
+                w.submit(idx)
 
     def submit(self, idx: int):
         """Place one query on a replica (credit-aware; when every child is
@@ -486,11 +681,12 @@ class ShardGroup:
         return did
 
     def deal(self, admission: AdmissionController, quantum: int):
-        q = admission.queue
-        while q:
-            idx = q[0]
+        while len(admission):
+            idx = admission.peek()
+            if idx is None:
+                return                    # waiting tenants all credit-capped
             if self.pending[idx] == 0:    # unrouted: completes immediately
-                q.popleft()
+                admission.pop()
                 self.sink.finish(np.asarray([idx]), self._none_ids,
                                  self._none_d)
                 continue
@@ -498,7 +694,7 @@ class ShardGroup:
             if self.backpressure and any(
                     self.children[int(o)].room() <= 0 for o in owners):
                 return                    # head waits; deadline may shed it
-            q.popleft()
+            admission.pop()
             for o in owners:
                 self.children[int(o)].submit(idx)
 
@@ -605,17 +801,18 @@ class MeshShardGroup:
         self._none_d = np.full((1, k), np.inf, np.float32)
 
     def deal(self, admission: AdmissionController, quantum: int):
-        q = admission.queue
-        while q:
-            idx = q[0]
+        while len(admission):
+            idx = admission.peek()
+            if idx is None:
+                return                    # waiting tenants all credit-capped
             if self.pending[idx] == 0:    # unrouted: completes immediately
-                q.popleft()
+                admission.pop()
                 self.sink.finish(np.asarray([idx]), self._none_ids,
                                  self._none_d)
                 continue
             if self.backpressure and self.worker.room() <= 0:
                 return                    # head waits; deadline may shed it
-            q.popleft()
+            admission.pop()
             self.worker.submit(idx)
 
     def pump(self, t: float, drain: bool) -> bool:
@@ -681,6 +878,14 @@ class TopologyReport:
     n_reissued: int = 0      # hedged (speculative duplicate) flushes
     n_duplicate_drops: int = 0   # race losers dropped before deposit
     shard_ewma_ms: list = dataclasses.field(default_factory=list)
+    # appended with defaults for the same reason (ISSUE 8)
+    tenants: dict = dataclasses.field(default_factory=dict)
+    # name -> per-tenant accounting: n_queries/n_admitted/n_shed/
+    # shed_fraction/qps/p50_ms/p99_ms/dealt/max_in_service/weight/...
+    cluster_hits: np.ndarray | None = None
+    # (C,) per-cluster scatter heat over admitted queries (sharded only):
+    # how many admitted probe slots landed on each global cluster — the
+    # measurement hook heat-aware placement (ROADMAP item 2) consumes
 
 
 class ServingTopology:
@@ -720,7 +925,8 @@ class ServingTopology:
                  shed_deadline_s: float | None = None,
                  backpressure: bool = True,
                  exec: str = "inproc",
-                 hedge: HedgeConfig | None = None):
+                 hedge: HedgeConfig | None = None,
+                 tenants=None):
         self.groups = [list(g) for g in groups]
         if not self.groups or any(not g for g in self.groups):
             raise ValueError("ServingTopology needs at least one engine in "
@@ -831,6 +1037,54 @@ class ServingTopology:
                                  "reissue onto; exec='mesh' has one device "
                                  "per shard (use exec='inproc')")
             self._exec.prepare(self)
+        self.tenants = self._resolve_tenants(tenants)
+
+    def _resolve_tenants(self, tenants) -> list[TenantSpec] | None:
+        """Validate the tenant registry against this topology's shape;
+        None = untenanted (run() synthesizes a single default tenant)."""
+        if tenants is None:
+            return None
+        specs = list(tenants.values()) if isinstance(tenants, dict) \
+            else list(tenants)
+        if not specs:
+            raise ValueError("tenants must hold at least one TenantSpec "
+                             "(or be None)")
+        for s in specs:
+            if not isinstance(s, TenantSpec):
+                raise ValueError(f"tenants entries must be TenantSpec, "
+                                 f"got {type(s).__name__}")
+        names = [s.name for s in specs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names: {sorted(names)}")
+        for s in specs:
+            if s.backend is not None:
+                if not self.sharded:
+                    raise ValueError(
+                        f"tenant {s.name!r}: preferred-backend routing "
+                        f"needs a sharded topology (shards >= 2); a "
+                        f"replicated tier serves one backend everywhere")
+                if s.backend not in self.modes:
+                    raise ValueError(
+                        f"tenant {s.name!r} prefers backend {s.backend!r} "
+                        f"but no shard serves it; this fleet serves "
+                        f"{sorted(set(self.modes))}")
+            if s.k is not None and s.k > self.k:
+                raise ValueError(f"tenant {s.name!r}: k={s.k} exceeds the "
+                                 f"engines' k={self.k}")
+            if s.nprobe is not None:
+                if not self.sharded:
+                    raise ValueError(
+                        f"tenant {s.name!r}: per-tenant nprobe is applied "
+                        f"at the sharded origin scatter (shards >= 2)")
+                if s.nprobe > self.nprobe:
+                    raise ValueError(
+                        f"tenant {s.name!r}: nprobe={s.nprobe} exceeds the "
+                        f"engines' nprobe={self.nprobe}")
+            if s.adaptive_tau is not None and not self.sharded:
+                raise ValueError(
+                    f"tenant {s.name!r}: per-tenant adaptive_tau is applied "
+                    f"at the sharded origin scatter (shards >= 2)")
+        return specs
 
     # -- warmup ---------------------------------------------------------------
     def warm(self) -> int:
@@ -879,12 +1133,18 @@ class ServingTopology:
             np.asarray(out[0])
 
     # -- scatter routing ------------------------------------------------------
-    def _route_probes(self, q: np.ndarray, backend):
+    def _route_probes(self, q: np.ndarray, backend, specs=None,
+                      tenant_of=None):
         """(1) IVF top-probe selection on the origin (with optional
         adaptive early termination: easy queries — small centroid-distance
         margin — keep fewer probes and fan out to fewer shards), (2)
-        backend match filter, (3) per-owner scatter split. Returns
-        (tables (O, N, P), touches (N, O))."""
+        per-tenant effort overrides (a tenant's ``nprobe``/``adaptive_tau``
+        prune that tenant's probe rows — cluster_filter sorts probes by
+        distance, so a prefix cut IS the lower-nprobe result), (3) backend
+        match filter, (4) per-owner scatter split. Returns
+        (tables (O, N, P), touches (N, O), served (N, P)) where ``served``
+        is the global-cluster-id probe table with every masked/dead slot
+        -1 — the per-cluster heat source."""
         probe, pdist = ivf_mod.cluster_filter(
             jnp.asarray(q), self.centroids, nprobe=self.nprobe)
         if self.adaptive_tau > 0:
@@ -894,6 +1154,23 @@ class ServingTopology:
                 ladder=self.adaptive_ladder)
             probe = jnp.where(keep, probe, -1)
         probe = np.asarray(probe)
+        if specs is not None and any(
+                s.nprobe is not None or s.adaptive_tau is not None
+                for s in specs):
+            probe = probe.copy()
+            pd = np.asarray(pdist)
+            for t, s in enumerate(specs):
+                rows = tenant_of == t
+                if not rows.any():
+                    continue
+                if s.nprobe is not None and s.nprobe < probe.shape[1]:
+                    probe[rows, s.nprobe:] = -1
+                if s.adaptive_tau is not None and s.adaptive_tau > 0:
+                    keep = np.asarray(ivf_mod.adaptive_keep_mask(
+                        jnp.asarray(pd[rows]), tau=float(s.adaptive_tau),
+                        min_probes=int(s.adaptive_min_probes),
+                        ladder=self.adaptive_ladder))
+                    probe[rows] = np.where(keep, probe[rows], -1)
         live = None
         if backend is not None:
             req = np.full(len(q), backend, object) \
@@ -920,7 +1197,8 @@ class ServingTopology:
             jnp.asarray(probe), jnp.asarray(self.part_of),
             jnp.asarray(self.local_cid), jnp.asarray(live),
             n_owners=len(self.groups))
-        return np.asarray(tables), np.asarray(touches)
+        served = np.where(live, probe, -1)
+        return np.asarray(tables), np.asarray(touches), served
 
     # -- origin gather/merge --------------------------------------------------
     def _merge(self, sink: ShardedSink, t: float, drain: bool,
@@ -971,21 +1249,35 @@ class ServingTopology:
         return children
 
     # -- the run loop ---------------------------------------------------------
-    def run(self, queries, arrival_times=None, backend=None
+    def run(self, queries, arrival_times=None, backend=None, tenant=None
             ) -> TopologyReport:
         """Replay a (possibly timed) stream through the topology; see
         StreamingScheduler.run for the arrival-replay semantics. ``backend``
         (None | registry key | per-query sequence of keys/None) restricts
         each query to shards declaring a matching backend (sharded
-        topologies only)."""
+        topologies only). ``tenant`` (None | tenant name | per-query
+        sequence of names) tags each query with a registered TenantSpec
+        (``ServingTopology(tenants=...)``): admission becomes DWRR across
+        the tenants, per-tenant deadlines/depths/credits/shed policies
+        apply, a tenant's preferred backend fills any query the explicit
+        ``backend`` argument left unrestricted, and per-tenant
+        k/nprobe/adaptive_tau override the engines' effort for that
+        tenant's rows. Untagged runs on an untenanted topology are the
+        single-default-tenant special case — bit-identical to the PR 5
+        FIFO."""
         q = np.asarray(queries, np.float32)
         n = len(q)
         arr = np.zeros(n) if arrival_times is None \
             else np.asarray(arrival_times, np.float64)
         order = np.argsort(arr, kind="stable")
+        specs, tenant_of = self._resolve_stream_tenants(tenant, n)
+        if backend is None and any(s.backend is not None for s in specs):
+            backend = [specs[t].backend for t in tenant_of]
         hedge_rt = None
+        served = None
         if self.sharded:
-            tables, touches = self._route_probes(q, backend)
+            tables, touches, served = self._route_probes(
+                q, backend, specs, tenant_of)
             slots = np.cumsum(touches, axis=1) - 1
             pending = touches.sum(axis=1).astype(np.int32)
             sink = ShardedSink(q, arr, self.k, self.fanout)
@@ -1016,7 +1308,12 @@ class ServingTopology:
             sink = StreamSink(q, arr, self.k)
             root = self._build_tree(sink, None, None)
         adm = AdmissionController(self.admission_depth, self.shed_deadline_s,
-                                  arr)
+                                  arr, tenants=specs, tenant_of=tenant_of)
+        if any(s.credits is not None for s in specs):
+            # completions must return in-service credits for DWRR to keep
+            # skipping/unskipping capped tenants; untenanted runs skip the
+            # hook so the default path costs nothing extra
+            sink.on_finish = adm.release
         shed = np.zeros(n, bool)
         shed_wait = np.full(n, np.nan)
         quantum = max(1, min(self.fill_threshold, self.buckets[-1]))
@@ -1027,24 +1324,29 @@ class ServingTopology:
             shed[idx] = True
             shed_wait[idx] = wait
 
-        while i < n or adm.queue or not root.idle() \
+        while i < n or len(adm) or not root.idle() \
                 or (self.sharded and sink.ready):
             t = sink.now()
-            # 1. arrivals -> bounded admission queue (overflow sheds now)
+            # 1. arrivals -> bounded admission queues (overflow sheds now:
+            # the arrival under drop-new, the tenant's oldest under
+            # drop-old)
             while i < n and arr[order[i]] <= t:
                 idx = int(order[i])
                 i += 1
                 if not adm.offer(idx):
                     shed_one(idx, t - arr[idx])
-            # 2. deadline shedding at the head of the queue — checked before
-            # dealing so every dealt query started within its deadline
+            for idx in adm.drain_evicted():
+                shed_one(idx, t - arr[idx])
+            # 2. deadline shedding at the head of each tenant queue —
+            # checked before dealing so every dealt query started within
+            # ITS deadline
             for idx in adm.expire(t):
                 shed_one(idx, t - arr[idx])
             # 3. deal admitted queries into the tree (credits permitting)
             root.deal(adm, quantum)
             # 4. pump + harvest every worker, non-blocking: one slow engine
             # must not stall its siblings; then merge gathered queries
-            drain = i >= n and not adm.queue
+            drain = i >= n and not len(adm)
             progress = root.pump(t, drain)
             progress |= root.harvest()
             if self.sharded:
@@ -1067,6 +1369,13 @@ class ServingTopology:
             dt = nxt - sink.now()
             time.sleep(min(max(dt, 5e-5), 5e-4))
         makespan = sink.now()
+        # per-tenant k: truncate the tenant's result rows to its promised
+        # depth (prefix of the full-k row — the merge output is sorted)
+        for t, s in enumerate(specs):
+            if s.k is not None and s.k < self.k:
+                rows = (tenant_of == t) & ~shed
+                sink.out_ids[rows, s.k:] = -1
+                sink.out_d[rows, s.k:] = np.inf
         if isinstance(root, MeshShardGroup):
             run_groups = [[root.worker]]  # one worker drives every shard
         elif self.sharded:
@@ -1074,12 +1383,41 @@ class ServingTopology:
         else:
             run_groups = [list(root.children)]
         return self._report(sink, shed, shed_wait, pending, merge_sizes,
-                            makespan, n, run_groups, hedge_rt)
+                            makespan, n, run_groups, hedge_rt,
+                            specs=specs, tenant_of=tenant_of, adm=adm,
+                            served=served)
+
+    def _resolve_stream_tenants(self, tenant, n: int):
+        """Map run(tenant=...) onto the registry: (specs, tenant_of)."""
+        if tenant is not None and self.tenants is None:
+            raise ValueError("tenant-tagged streams need a TenantSpec "
+                             "registry (ServingTopology(tenants=[...]))")
+        if self.tenants is None:
+            return [TenantSpec("default")], np.zeros(n, np.int32)
+        specs = self.tenants
+        name_to = {s.name: t for t, s in enumerate(specs)}
+        if tenant is None:
+            return specs, np.zeros(n, np.int32)
+        if isinstance(tenant, str):
+            if tenant not in name_to:
+                raise ValueError(f"unknown tenant {tenant!r}; registered: "
+                                 f"{sorted(name_to)}")
+            return specs, np.full(n, name_to[tenant], np.int32)
+        labels = list(tenant)
+        if len(labels) != n:
+            raise ValueError(f"tenant list length {len(labels)} != {n} "
+                             f"queries")
+        missing = sorted(set(labels) - set(name_to))
+        if missing:
+            raise ValueError(f"unknown tenant(s) {missing}; registered: "
+                             f"{sorted(name_to)}")
+        return specs, np.asarray([name_to[l] for l in labels], np.int32)
 
     # -- reporting ------------------------------------------------------------
     def _report(self, sink, shed, shed_wait, pending, merge_sizes,
                 makespan: float, n: int, run_groups: list,
-                hedge_rt: ShardHedge | None = None) -> TopologyReport:
+                hedge_rt: ShardHedge | None = None, *, specs=None,
+                tenant_of=None, adm=None, served=None) -> TopologyReport:
         n_shed = int(shed.sum())
         n_admitted = n - n_shed
         flush_sizes = [s for grp in run_groups for w in grp
@@ -1101,7 +1439,8 @@ class ServingTopology:
                 for o in range(len(self.groups))]
             return self._finish_report(
                 sink, shed, shed_wait, pending, merge_sizes, makespan, n,
-                flush_sizes, per_engine, hedge_rt)
+                flush_sizes, per_engine, hedge_rt, specs=specs,
+                tenant_of=tenant_of, adm=adm, served=served)
         seen_caches: set[int] = set()
         j = 0
         for o, grp_workers in enumerate(run_groups):
@@ -1125,13 +1464,50 @@ class ServingTopology:
                 j += 1
         return self._finish_report(sink, shed, shed_wait, pending,
                                    merge_sizes, makespan, n, flush_sizes,
-                                   per_engine, hedge_rt)
+                                   per_engine, hedge_rt, specs=specs,
+                                   tenant_of=tenant_of, adm=adm,
+                                   served=served)
+
+    def _tenant_stats(self, sink, shed, makespan, specs, tenant_of, adm
+                      ) -> dict:
+        """Per-tenant goodput/latency/shed accounting for the report."""
+        out = {}
+        for t, s in enumerate(specs):
+            rows = tenant_of == t
+            nt = int(rows.sum())
+            ns = int(shed[rows].sum())
+            out[s.name] = {
+                "weight": s.weight,
+                "backend": s.backend,
+                "k": s.k if s.k is not None else self.k,
+                "n_queries": nt,
+                "n_admitted": nt - ns,
+                "n_shed": ns,
+                "shed_fraction": ns / nt if nt else 0.0,
+                "qps": (nt - ns) / makespan if makespan > 0 else 0.0,
+                "p50_ms": percentile_ms(sink.lat[rows], 50),
+                "p99_ms": percentile_ms(sink.lat[rows], 99),
+                "dealt": adm.dealt[t] if adm is not None else nt - ns,
+                "max_in_service": adm.max_in_service[t]
+                if adm is not None else 0,
+            }
+        return out
 
     def _finish_report(self, sink, shed, shed_wait, pending, merge_sizes,
                        makespan, n, flush_sizes, per_engine,
-                       hedge_rt) -> TopologyReport:
+                       hedge_rt, *, specs=None, tenant_of=None, adm=None,
+                       served=None) -> TopologyReport:
         n_shed = int(shed.sum())
         n_admitted = n - n_shed
+        if specs is None:
+            specs = [TenantSpec("default")]
+            tenant_of = np.zeros(n, np.int32)
+        cluster_hits = None
+        if served is not None:
+            adm_probes = served[~shed]
+            cluster_hits = np.bincount(
+                adm_probes[adm_probes >= 0].ravel(),
+                minlength=len(self.part_of)).astype(np.int64)
         return TopologyReport(
             ids=sink.out_ids, dists=sink.out_d, latency_s=sink.lat,
             shed=shed, shed_wait_s=shed_wait,
@@ -1157,7 +1533,10 @@ class ServingTopology:
             exec=self._exec.name,
             n_reissued=hedge_rt.n_reissued if hedge_rt else 0,
             n_duplicate_drops=hedge_rt.n_duplicate_drops if hedge_rt else 0,
-            shard_ewma_ms=hedge_rt.shard_ewma_ms if hedge_rt else [])
+            shard_ewma_ms=hedge_rt.shard_ewma_ms if hedge_rt else [],
+            tenants=self._tenant_stats(sink, shed, makespan, specs,
+                                       tenant_of, adm),
+            cluster_hits=cluster_hits)
 
 
 def topology(eng, *, shards: int = 1, replicas: int = 1,

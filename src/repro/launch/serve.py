@@ -38,6 +38,19 @@ on CPU with XLA_FLAGS=--xla_force_host_platform_device_count=N, or
 launch one process per host via jax.distributed for the identical code
 path over real hosts. Results are bit-identical to --exec inproc.
 
+--tenants "name:weight[:backend],..." splits the --rag retrieval stream
+across named tenants (round-robin over the decode batch) served
+weighted-fair by the topology's DWRR admission tier (core/topology.py,
+ISSUE 8): each tenant's share of contended capacity tracks its weight,
+and a ``backend`` entry pins that tenant's queries to shards declaring
+the matching RankingBackend mode (requires --sharded; the shard
+partitions are assigned the tenants' backends round-robin). Example:
+
+    --rag --fleet 2 --sharded --tenants "latency:4:hamming,recall:1:exact"
+
+Malformed entries, non-positive weights, unknown backends, and tenant
+flags without the topology to serve them are argument ERRORS.
+
 --sharded / --replicas without --fleet >= 2 is an argument ERROR, not a
 silent single-engine run.
 """
@@ -54,7 +67,9 @@ import numpy as np
 
 from ..configs import get_smoke
 from ..core import compact_index, engine
-from ..core.fleet import FleetScheduler, replicate_engine, topology
+from ..core.backends import available_backends
+from ..core.fleet import FleetScheduler, TenantSpec, replicate_engine, \
+    topology
 from ..core.pipeline import StreamingScheduler, bucket_ladder
 from ..data.synthetic import clustered_vectors
 from ..models.model import build_model
@@ -112,10 +127,47 @@ ENCODERS: dict[str, Callable[..., QueryEncoder]] = {
 }
 
 
+def parse_tenants(spec: str) -> list[TenantSpec]:
+    """Parse --tenants "name:weight[:backend],..." into TenantSpecs.
+
+    Every malformed entry raises ValueError with the offending text —
+    tenant specs configure an SLO contract, so silent coercion is worse
+    than an argument error."""
+    out = []
+    for entry in spec.split(","):
+        entry = entry.strip()
+        if not entry:
+            raise ValueError(f"--tenants has an empty entry: {spec!r}")
+        parts = [p.strip() for p in entry.split(":")]
+        if len(parts) not in (2, 3) or not parts[0]:
+            raise ValueError(
+                f"bad tenant entry {entry!r}: expected name:weight[:backend]")
+        name = parts[0]
+        try:
+            weight = float(parts[1])
+        except ValueError:
+            raise ValueError(f"tenant {name!r}: weight {parts[1]!r} is not "
+                             f"a number") from None
+        if not weight > 0:
+            raise ValueError(
+                f"tenant {name!r}: weight must be > 0, got {weight}")
+        backend = parts[2] if len(parts) == 3 else None
+        if backend is not None and backend not in available_backends():
+            raise ValueError(
+                f"tenant {name!r}: unknown backend {backend!r}; registered "
+                f"backends: {available_backends()}")
+        out.append(TenantSpec(name=name, weight=weight, backend=backend))
+    names = [t.name for t in out]
+    if len(set(names)) != len(names):
+        raise ValueError(f"--tenants has duplicate tenant names: {names}")
+    return out
+
+
 def run(arch: str, requests: int, prompt_len: int, gen: int,
         rag: bool = False, seed: int = 0, verbose: bool = True,
         query_encoder: QueryEncoder | str | None = None, fleet: int = 1,
-        sharded: bool = False, replicas: int = 1, exec: str = "inproc"):
+        sharded: bool = False, replicas: int = 1, exec: str = "inproc",
+        tenants: str | list | None = None):
     # flag-consistency first: these used to be SILENTLY ignored, burning a
     # debugging session on a "sharded" run that never sharded anything
     if sharded and fleet < 2:
@@ -137,6 +189,28 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
         raise ValueError(
             "--exec mesh drives one device per shard; replication on the "
             "mesh is a multi-process launch, not --replicas")
+    specs = None
+    if tenants is not None:
+        specs = parse_tenants(tenants) if isinstance(tenants, str) \
+            else list(tenants)
+        if not rag:
+            raise ValueError("--tenants tags the retrieval stream and "
+                             "needs --rag")
+        if fleet < 2:
+            raise ValueError(
+                f"--tenants needs a serving topology to arbitrate "
+                f"(--fleet >= 2; got --fleet {fleet})")
+        tenant_backends = sorted({t.backend for t in specs
+                                  if t.backend is not None})
+        if tenant_backends and not sharded:
+            raise ValueError(
+                f"tenant backends {tenant_backends} pin tenants to shard "
+                f"modes and need --sharded")
+        if tenant_backends and fleet < len(tenant_backends):
+            raise ValueError(
+                f"{len(tenant_backends)} tenant backends "
+                f"{tenant_backends} need --fleet >= {len(tenant_backends)} "
+                f"shards to serve them (got --fleet {fleet})")
     cfg = get_smoke(arch)
     model = build_model(cfg)
     key = jax.random.PRNGKey(seed)
@@ -149,6 +223,15 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
                                          knn_k=16)
         scfg = engine.SearchConfig(nprobe=2, ef=16, k=4)
         eng = engine.PIMCQGEngine.build(key, x, icfg, scfg, n_shards=2)
+        modes = None
+        if specs is not None:
+            tenant_backends = sorted({t.backend for t in specs
+                                      if t.backend is not None})
+            if tenant_backends:
+                # heterogeneous fleet: spread the tenants' preferred
+                # backends across the shard partitions round-robin
+                modes = [tenant_backends[o % len(tenant_backends)]
+                         for o in range(fleet)]
         if fleet > 1 and sharded:
             # partitioned tier (x replicas = the hybrid): each of `fleet`
             # shard groups owns a disjoint cluster slice served by
@@ -157,13 +240,14 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
             # and admission control applies tier-wide
             scheduler = topology(
                 eng, shards=fleet, replicas=replicas, exec=exec,
+                modes=modes, tenants=specs,
                 buckets=bucket_ladder(max(requests, 1)),
                 fill_threshold=max(requests // 2, 1), wait_limit_s=5e-3)
         elif fleet > 1:
             # multi-engine tier: shard the decode-step query stream across
             # `fleet` replicas behind admission control (core/fleet.py)
             scheduler = FleetScheduler(
-                replicate_engine(eng, fleet),
+                replicate_engine(eng, fleet), tenants=specs,
                 buckets=bucket_ladder(max(requests, 1)),
                 fill_threshold=max(requests // 2, 1), wait_limit_s=5e-3)
         else:
@@ -197,7 +281,13 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
         if eng is not None and i == 0:
             # retrieval hook: the query encoder embeds the decode state
             q = query_encoder(logits)
-            rag_report = scheduler.run(q)
+            if specs is not None:
+                # round-robin the decode batch across the tenants: every
+                # tenant exercises its own admission queue/backend route
+                labels = [specs[j % len(specs)].name for j in range(len(q))]
+                rag_report = scheduler.run(q, tenant=labels)
+            else:
+                rag_report = scheduler.run(q)
             retrieved = rag_report.ids
     toks = jnp.concatenate(out, axis=1)
     jax.block_until_ready(toks)
@@ -232,6 +322,12 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
                       f"flushes={rag_report.n_flushes} "
                       f"compiles={rag_report.compiles} "
                       f"p50={rag_report.p50_ms:.1f}ms")
+            if specs is not None and getattr(rag_report, "tenants", None):
+                for name, st in rag_report.tenants.items():
+                    print(f"[serve] rag: tenant {name!r} w={st['weight']:g} "
+                          f"backend={st['backend'] or 'any'} "
+                          f"queries={st['n_queries']} shed={st['n_shed']} "
+                          f"p50={st['p50_ms']:.1f}ms")
     return np.asarray(toks), retrieved
 
 
@@ -263,6 +359,13 @@ def main():
                          "and runs scatter/gather as collectives (needs N "
                          "devices: XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=N or a jax.distributed launch)")
+    ap.add_argument("--tenants", default=None,
+                    help="with --rag --fleet N: comma-separated "
+                         "name:weight[:backend] tenant specs; the decode "
+                         "batch is split round-robin across them and served "
+                         "weighted-fair (DWRR) by the admission tier; a "
+                         "backend entry pins the tenant to matching shards "
+                         "(needs --sharded)")
     args = ap.parse_args()
     # surface flag misuse as an argparse error (exit 2 + usage), not a
     # silently different topology
@@ -278,9 +381,22 @@ def main():
     if args.exec == "mesh" and args.replicas > 1:
         ap.error("--exec mesh drives one device per shard; --replicas must "
                  "be 1 (replicate by launching more processes)")
+    if args.tenants is not None:
+        try:
+            specs = parse_tenants(args.tenants)
+        except ValueError as e:
+            ap.error(str(e))
+        if not args.rag:
+            ap.error("--tenants tags the retrieval stream and needs --rag")
+        if args.fleet < 2:
+            ap.error(f"--tenants needs --fleet >= 2 "
+                     f"(got --fleet {args.fleet})")
+        if any(t.backend is not None for t in specs) and not args.sharded:
+            ap.error("tenant backends pin tenants to shard modes and need "
+                     "--sharded")
     run(args.arch, args.requests, args.prompt_len, args.gen, args.rag,
         query_encoder=args.encoder, fleet=args.fleet, sharded=args.sharded,
-        replicas=args.replicas, exec=args.exec)
+        replicas=args.replicas, exec=args.exec, tenants=args.tenants)
 
 
 if __name__ == "__main__":
