@@ -30,6 +30,10 @@ Modules:
     multinode       Fig 18     sharded + hybrid scatter/gather + IB model
     pim_arch        Fig 19     PIM-HBM / AiM projection
     roofline_table  Fig 1 + §Roofline table from dry-run artifacts
+    churn           ROADMAP 1  day-2 streaming mutation + autoscaling:
+                               1% churn under 10x surge with zero
+                               unavailability, <= 0.01 recall drift,
+                               zero recompiles across live swaps
 """
 
 from __future__ import annotations
@@ -54,6 +58,7 @@ MODULES = [
     ("fig18", "multinode"),
     ("fig19", "pim_arch"),
     ("roofline", "roofline_table"),
+    ("churn", "churn"),
 ]
 
 

@@ -1,3 +1,14 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+
+# The typed serving surface (day-2 operations API): build an index, wrap
+# it mutable, spec the tier, swap mutations in live.
+from .autoscale import AutoscalePolicy, Autoscaler, ScaleAction
+from .mutable_index import MutableIndex
+from .topology import (ServingTopology, TenantSpec, TopologyConfig,
+                       TopologyReport, topology)
+
+__all__ = ["AutoscalePolicy", "Autoscaler", "ScaleAction", "MutableIndex",
+           "ServingTopology", "TenantSpec", "TopologyConfig",
+           "TopologyReport", "topology"]

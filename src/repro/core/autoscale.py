@@ -1,0 +1,222 @@
+"""Signal-driven topology autoscaling (day-2 operations, ROADMAP item 1).
+
+The serving spine already measures everything an operator would page on:
+``TopologyReport`` carries the shed fraction, per-tenant latency
+percentiles, per-worker credit occupancy (``max_in_flight`` against the
+FIFO depth) and the per-cluster scatter heat (``cluster_hits``). The
+``Autoscaler`` closes the loop: between streams it reads those signals
+and grows/shrinks each shard group's replica count on the live
+``ServingTopology``. Replica/worker trees are rebuilt per ``run()``
+(topology.py), so a between-runs resize is race-free by construction —
+no query ever observes a half-scaled tier.
+
+Scaling decisions are deliberately boring (threshold + patience
+hysteresis, the shape every production autoscaler converges to):
+
+  * scale UP a group when the tier sheds (``shed_fraction > shed_high``),
+    misses its latency target (``p99_high_ms``), or its workers run at
+    credit saturation (``occupancy >= occupancy_high``) for
+    ``up_patience`` consecutive reports;
+  * scale DOWN when a group is idle (``occupancy <= occupancy_low``,
+    nothing shed, latency fine) for ``down_patience`` consecutive
+    reports — the asymmetry (fast up, slow down) is the anti-flapping
+    bias;
+  * streaks reset after every action, so a fresh observation window must
+    accumulate before the next move (no up-down oscillation on a single
+    boundary-riding signal).
+
+Global signals (shed, p99) are attributed to the HOTTEST group — by
+scatter heat when ``cluster_hits`` + the cluster partition are available,
+by served queries otherwise — so a one-shard hotspot grows that shard's
+replicas instead of the whole fleet.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = ["AutoscalePolicy", "Autoscaler", "ScaleAction"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalePolicy:
+    """Thresholds + hysteresis for the replica autoscaler.
+
+    ``p99_high_ms`` is the latency SLO trigger — it checks the WORST
+    per-tenant p99 when tenants are configured (a noisy neighbor must not
+    hide a starved tenant inside the global percentile) and the global
+    p99 otherwise. ``None`` disables the latency trigger."""
+
+    min_replicas: int = 1
+    max_replicas: int = 4
+    shed_high: float = 0.01          # shed_fraction above this = overload
+    p99_high_ms: float | None = None
+    occupancy_high: float = 0.9      # worker credit saturation
+    occupancy_low: float = 0.25      # idle enough to consider shrinking
+    up_patience: int = 1             # consecutive hot reports before growing
+    down_patience: int = 3           # consecutive idle reports before shrinking
+    step: int = 1                    # replicas added/removed per action
+
+    def __post_init__(self):
+        if not 1 <= self.min_replicas <= self.max_replicas:
+            raise ValueError(
+                f"need 1 <= min_replicas <= max_replicas, got "
+                f"{self.min_replicas}..{self.max_replicas}")
+        if not 0.0 <= self.shed_high < 1.0:
+            raise ValueError(f"shed_high must be in [0, 1), got {self.shed_high}")
+        if self.p99_high_ms is not None and not self.p99_high_ms > 0:
+            raise ValueError(f"p99_high_ms must be > 0 or None, "
+                             f"got {self.p99_high_ms}")
+        if not 0.0 < self.occupancy_high <= 1.0:
+            raise ValueError(f"occupancy_high must be in (0, 1], "
+                             f"got {self.occupancy_high}")
+        if not 0.0 <= self.occupancy_low < self.occupancy_high:
+            raise ValueError(
+                f"need 0 <= occupancy_low < occupancy_high, got "
+                f"{self.occupancy_low} vs {self.occupancy_high}")
+        if self.up_patience < 1 or self.down_patience < 1:
+            raise ValueError("patience counters must be >= 1")
+        if self.step < 1:
+            raise ValueError(f"step must be >= 1, got {self.step}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleAction:
+    """One autoscaler decision, kept in ``Autoscaler.actions`` for the
+    bench/ops log."""
+    group: int
+    direction: str           # "up" | "down"
+    n_before: int
+    n_after: int
+    reason: str
+
+
+class Autoscaler:
+    """Consumes ``TopologyReport``s, resizes ``topo``'s shard groups.
+
+    Call ``step(report)`` after every stream; it returns the list of
+    ``ScaleAction``s applied (possibly empty). ``observe`` alone computes
+    the per-group signal dicts without acting — the unit-test seam."""
+
+    def __init__(self, topo, policy: AutoscalePolicy | None = None):
+        if policy is None:
+            policy = AutoscalePolicy()
+        if not isinstance(policy, AutoscalePolicy):
+            raise TypeError(f"policy must be an AutoscalePolicy, "
+                            f"got {type(policy).__name__}")
+        self.topo = topo
+        self.policy = policy
+        n_groups = len(topo.groups)
+        self._hot = [0] * n_groups
+        self._idle = [0] * n_groups
+        self.actions: list[ScaleAction] = []
+
+    # -- signal extraction ---------------------------------------------------
+    def observe(self, report) -> list[dict]:
+        """Per-shard-group signal dict: occupancy (max worker credit
+        utilisation), heat share, and whether the group carries the
+        tier-global overload signals (shed / p99 breach)."""
+        n_groups = len(self.topo.groups)
+        occ = np.zeros(n_groups)
+        queries = np.zeros(n_groups)
+        depth = max(int(getattr(self.topo, "fifo_depth", 1)), 1)
+        for pe in report.per_engine:
+            g = int(pe.get("shard", 0))
+            if 0 <= g < n_groups:
+                occ[g] = max(occ[g], pe.get("max_in_flight", 0) / depth)
+                queries[g] += pe.get("queries", 0)
+
+        heat = self._heat_share(report, n_groups, queries)
+        hottest = int(np.argmax(heat)) if heat.max() > 0 else 0
+
+        p99 = self._worst_p99(report)
+        shed_hot = report.shed_fraction > self.policy.shed_high
+        p99_hot = (self.policy.p99_high_ms is not None
+                   and math.isfinite(p99) and p99 > self.policy.p99_high_ms)
+
+        out = []
+        for g in range(n_groups):
+            carries_global = g == hottest
+            hot = (occ[g] >= self.policy.occupancy_high
+                   or (carries_global and (shed_hot or p99_hot)))
+            idle = (not hot and occ[g] <= self.policy.occupancy_low
+                    and report.shed_fraction == 0.0 and not p99_hot)
+            out.append({
+                "occupancy": float(occ[g]), "heat": float(heat[g]),
+                "queries": float(queries[g]), "hottest": carries_global,
+                "hot": bool(hot), "idle": bool(idle),
+            })
+        return out
+
+    def _heat_share(self, report, n_groups: int,
+                    queries: np.ndarray) -> np.ndarray:
+        """Per-group share of scatter heat: fold ``cluster_hits`` through
+        the cluster partition when both exist, else fall back to per-group
+        served-query counts."""
+        hits = getattr(report, "cluster_hits", None)
+        part_of = getattr(self.topo, "part_of", None)
+        if hits is not None and part_of is not None:
+            part_of = np.asarray(part_of)
+            if len(hits) == len(part_of):
+                heat = np.zeros(n_groups)
+                np.add.at(heat, part_of, np.asarray(hits, np.float64))
+                if heat.sum() > 0:
+                    return heat / heat.sum()
+        total = queries.sum()
+        return queries / total if total > 0 else np.zeros(n_groups)
+
+    def _worst_p99(self, report) -> float:
+        tenants = getattr(report, "tenants", None) or {}
+        per_tenant = [t.get("p99_ms", float("nan")) for t in tenants.values()
+                      if t.get("n_admitted", 0) > 0]
+        per_tenant = [p for p in per_tenant if math.isfinite(p)]
+        if per_tenant:
+            return max(per_tenant)
+        p = report.p99_ms
+        return p if math.isfinite(p) else float("nan")
+
+    # -- the control loop ----------------------------------------------------
+    def step(self, report) -> list[ScaleAction]:
+        """Update streaks from one report and apply any due resizes."""
+        pol = self.policy
+        applied: list[ScaleAction] = []
+        for g, sig in enumerate(self.observe(report)):
+            if sig["hot"]:
+                self._hot[g] += 1
+                self._idle[g] = 0
+            elif sig["idle"]:
+                self._idle[g] += 1
+                self._hot[g] = 0
+            else:
+                self._hot[g] = 0
+                self._idle[g] = 0
+
+            n = len(self.topo.groups[g])
+            if self._hot[g] >= pol.up_patience and n < pol.max_replicas:
+                target = min(n + pol.step, pol.max_replicas)
+                self.topo.scale_replicas(g, target)
+                applied.append(ScaleAction(
+                    group=g, direction="up", n_before=n, n_after=target,
+                    reason=(f"occupancy={sig['occupancy']:.2f} "
+                            f"shed={report.shed_fraction:.3f} hot streak "
+                            f"{self._hot[g]}>={pol.up_patience}")))
+                self._hot[g] = 0
+                self._idle[g] = 0
+            elif self._idle[g] >= pol.down_patience and n > pol.min_replicas:
+                target = max(n - pol.step, pol.min_replicas)
+                self.topo.scale_replicas(g, target)
+                applied.append(ScaleAction(
+                    group=g, direction="down", n_before=n, n_after=target,
+                    reason=(f"occupancy={sig['occupancy']:.2f} idle streak "
+                            f"{self._idle[g]}>={pol.down_patience}")))
+                self._hot[g] = 0
+                self._idle[g] = 0
+        self.actions.extend(applied)
+        return applied
+
+    def __repr__(self) -> str:
+        return (f"Autoscaler(groups={[len(g) for g in self.topo.groups]}, "
+                f"actions={len(self.actions)})")

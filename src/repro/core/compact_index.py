@@ -189,7 +189,22 @@ def compact_bytes_per_node(dim: int, degree: int) -> int:
     return code_bytes + 4 + degree * 4
 
 
-def footprint_report(dim: int, degree: int, n: int) -> dict:
+def footprint_report(dim: int, degree: int, n: int, *, tombstoned: int = 0,
+                     slab: int = 0) -> dict:
+    """Per-node byte math with the day-2 live-vs-reclaimable split.
+
+    ``n`` counts LIVE nodes (the Table II comparison is unchanged);
+    ``tombstoned`` rows are physically resident but reclaimable at the
+    next compaction, and ``slab`` rows are free headroom spoken for by
+    future inserts — both billed separately so ``mem_budget`` enforcement
+    (placement.greedy_place) stays honest under churn."""
+    per = compact_bytes_per_node(dim, degree)
     s = symphonyqg_bytes_per_node(dim, degree) * n
-    c = compact_bytes_per_node(dim, degree) * n
-    return {"symphonyqg_bytes": s, "pimcqg_bytes": c, "reduction": s / c}
+    live = per * n
+    reclaimable = per * tombstoned
+    reserved = per * slab
+    return {"symphonyqg_bytes": s, "pimcqg_bytes": live,
+            "reduction": s / live if live else float("inf"),
+            "live_bytes": live, "reclaimable_bytes": reclaimable,
+            "reserved_bytes": reserved,
+            "resident_bytes": live + reclaimable + reserved}

@@ -451,6 +451,39 @@ class PIMCQGEngine:
             f"batch of {nq} exceeds largest bucket {self.buckets[-1]}; "
             f"split upstream (StreamingScheduler flushes at most max bucket)")
 
+    # -- live mutation swap --------------------------------------------------
+    def refresh(self, index: compact_index.CompactIndex,
+                host: compact_index.HostStore | None = None
+                ) -> "PIMCQGEngine":
+        """Swap mutated/compacted arrays under the live engine.
+
+        ``placed``/``host`` are read at dispatch time and flow into the
+        compiled search functions as (functional) jit arguments, so the
+        swap is atomic at flush granularity: in-flight flushes keep the
+        old arrays, the next flush sees the new ones, and nothing
+        retraces — provided shapes match (``MutableIndex`` pre-allocates
+        slabs and vector capacity for exactly this reason). The fresh
+        arrays are re-placed into the OLD arrays' device layout via
+        ``distributed.elastic.reshard_like``."""
+        if index.n_clusters != self.index.n_clusters \
+                or index.budget != self.index.budget:
+            raise ValueError(
+                f"refresh needs matching shapes: "
+                f"{index.n_clusters}x{index.budget} vs this engine's "
+                f"{self.index.n_clusters}x{self.index.budget}")
+        if host is not None:
+            if host.vectors.shape != self.host.vectors.shape:
+                raise ValueError(
+                    f"host store grew {self.host.vectors.shape} -> "
+                    f"{host.vectors.shape}; pre-allocate capacity "
+                    f"(MutableIndex(capacity=...)) so swaps never retrace")
+            self.host = host
+        from ..distributed import elastic
+        self.index = index
+        self.placed = elastic.reshard_like(
+            self.placed, _place(index, self.place, self.backend))
+        return self
+
     @property
     def compile_count(self) -> int:
         """Number of distinct search executables built (one per shape)."""
@@ -470,5 +503,14 @@ class PIMCQGEngine:
 
     # -- reporting ----------------------------------------------------------
     def footprint(self) -> dict:
-        n = int(np.asarray(self.index.n_valid).sum())
-        return compact_index.footprint_report(self.icfg.dim, self.icfg.degree, n)
+        """Byte accounting with the live-vs-reclaimable split: ``n_valid``
+        counts the occupied prefix (live + tombstoned under churn), served
+        ``node_ids`` >= 0 counts live, and the pad rows above the occupied
+        prefix are slab headroom spoken for by future inserts."""
+        idx = self.index
+        occupied = int(np.asarray(idx.n_valid).sum())
+        live = int((np.asarray(idx.node_ids) >= 0).sum())
+        reserved = idx.n_clusters * idx.budget - occupied
+        return compact_index.footprint_report(
+            self.icfg.dim, self.icfg.degree, live,
+            tombstoned=occupied - live, slab=reserved)

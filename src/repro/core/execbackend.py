@@ -136,7 +136,15 @@ class MeshBackend:
         self._scfg, self._dim = e0.scfg, e0.icfg.dim
         self._inner = e0.place.n_shards
         self._k = e0.scfg.k
+        self._n_owners = n_owners
+        self._stack_and_place(leaders)
+        self._ready = True
 
+    def _stack_and_place(self, leaders) -> None:
+        """Stack the leaders' placed arrays along the owner axis and lay
+        them on the mesh through ``distributed.elastic.place`` (the elastic
+        substrate serving finally uses: the same resolve-spec + device_put
+        path that grow/shrink ``replace_mesh`` events go through)."""
         def stack(leaves, cl_axis: int, fill):
             """Stack per-owner arrays along a new leading owner axis,
             padding ``cl_axis`` to the widest owner with ``fill`` (pad
@@ -155,26 +163,35 @@ class MeshBackend:
         shard_of = stack([e.place.shard_of for e in leaders], 0, 0)
         local_slot = stack([e.place.local_slot for e in leaders], 0, 0)
 
+        from ..distributed import elastic
         from ..distributed import sharding as sharding_mod
+        e0 = leaders[0]
         spec_sharded = P(self.axis)
         with sharding_mod.use_mesh(self.mesh):
-            shardings = sharding_mod.shardings_tree(
-                self.mesh, placed,
-                jax.tree.map(lambda _: spec_sharded, placed))
-            self._placed = jax.device_put(placed, shardings)
-            put = lambda a: jax.device_put(
-                jnp.asarray(a),
-                sharding_mod.shardings_tree(self.mesh, a, spec_sharded))
-            self._shard_of = put(shard_of)
-            self._local_slot = put(local_slot)
+            self._placed = elastic.place(
+                placed, jax.tree.map(lambda _: spec_sharded, placed),
+                self.mesh)
+            self._shard_of = elastic.place(jnp.asarray(shard_of),
+                                           spec_sharded, self.mesh)
+            self._local_slot = elastic.place(jnp.asarray(local_slot),
+                                             spec_sharded, self.mesh)
             # replicated operands: one rotation + one shared host store
-            rep = jax.sharding.NamedSharding(self.mesh, P())
-            self._rotation = jax.device_put(
-                jnp.asarray(e0.index.rotation), rep)
-            self._vectors = jax.device_put(
-                jnp.asarray(e0.host.vectors), rep)
-        self._n_owners = n_owners
-        self._ready = True
+            self._rotation = elastic.place(
+                jnp.asarray(e0.index.rotation), P(), self.mesh)
+            self._vectors = elastic.place(
+                jnp.asarray(e0.host.vectors), P(), self.mesh)
+
+    def refresh(self, topo) -> None:
+        """Re-place the index stack after a live mutation swap
+        (``ServingTopology.apply``): restack from the engines' refreshed
+        arrays and re-place them on the SAME mesh. Shapes are stable (the
+        ``MutableIndex`` contract), the arrays enter the compiled
+        ``shard_map`` steps as jit arguments, and the mesh itself is
+        unchanged — so every executable in ``_cache`` stays valid and the
+        swap costs one transfer, zero retraces."""
+        if not self._ready:
+            raise RuntimeError("MeshBackend.refresh() before prepare()")
+        self._stack_and_place([g[0] for g in topo.groups])
 
     # -- compiled step per (bucket, nprobe) shape ---------------------------
     def _build_fn(self, bucket: int, p: int):

@@ -33,6 +33,12 @@ unmodified against them) plus their reports and builders:
     semantics (no admission control); build the same shape through
     ``core.topology.topology(shards=N, shed_deadline_s=...)`` to get the
     overload machinery.
+
+New deployments should skip the facades and spec the tier with the typed
+``TopologyConfig`` (re-exported here): ``TopologyConfig(shards=N,
+replicas=R, mutable=..., autoscale=...).build(eng)`` — the facades stay
+for the pinned legacy suites and carry none of the day-2 machinery
+(streaming mutation swaps, autoscaling).
 """
 
 from __future__ import annotations
@@ -44,12 +50,12 @@ import numpy as np
 from .pipeline import StageCosts
 from .topology import (AdmissionController, ReplicaGroup, ServingTopology,
                        ShardGroup, ShardWorker, ShardedSink, TenantSpec,
-                       TopologyReport, partition_index, replicate_engine,
-                       topology)
+                       TopologyConfig, TopologyReport, partition_index,
+                       replicate_engine, topology)
 
 __all__ = ["FleetScheduler", "FleetReport", "replicate_engine",
            "ShardedFleet", "ShardedReport", "partition_engine", "topology",
-           "TenantSpec"]
+           "TenantSpec", "TopologyConfig"]
 
 ROUTE_POLICIES = ("round-robin", "least-in-flight")
 

@@ -1,0 +1,419 @@
+"""Day-2 streaming mutation on the compact index (ROADMAP item 1).
+
+``CompactIndex`` is an offline build product served frozen; a production
+index is never static. ``MutableIndex`` wraps the same per-cluster dense
+arrays in host-side (numpy) mirrors and gives mutation ONE public entry
+point:
+
+  * ``delete(ids)``  — tombstones: the served ``node_ids`` slot flips to
+    -1 (so the node flows through ``route_lanes``/rerank exactly like the
+    existing pad holes and can never be returned), but its codes and
+    adjacency stay — the dead node remains a *waypoint* the beam search
+    can traverse, which preserves graph navigability until compaction.
+  * ``insert(ids, vecs)`` — bounded per-cluster append slabs: each vector
+    is routed to its nearest FROZEN centroid (``ivf.assign``),
+    RabitQ-encoded against that cluster's centroid/rotation
+    (``rabitq.encode`` is row-independent, so the codes are bitwise what
+    a full rebuild would produce), given its ``f_add`` via
+    ``mulfree.fold_node_factor``, and linked into the cluster graph with
+    the existing Vamana prune path (``graph._robust_prune_row`` +
+    backlink re-prune). Cluster constants (alpha/rho/shifts) stay stale
+    until compaction — the bounded-recall-drift source.
+  * ``compact(clusters=None)`` — background compaction: re-gathers each
+    dirty cluster's live set in ascending-gid order and re-runs the
+    offline ``_encode_cluster`` at the mutable budget. Because cluster
+    membership is frozen-centroid argmin and the within-cluster order is
+    canonical, a compacted cluster is BITWISE identical to a from-scratch
+    rebuild of the same live set (``rebuild()``; pinned in
+    tests/test_mutable.py).
+
+Shape stability is the contract that makes live swaps free: the cluster
+arrays are padded once to ``budget + slab`` and the host vector store is
+pre-allocated to ``capacity`` rows, so every snapshot after any number of
+mutations has identical shapes — ``PIMCQGEngine.refresh`` /
+``ServingTopology.apply`` swap the arrays under compiled executables
+without a single retrace.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import compact_index as compact_index_mod
+from . import graph as graph_mod
+from . import ivf, mulfree, rabitq
+from .compact_index import (CompactIndex, HostStore, IndexConfig,
+                            compact_bytes_per_node)
+
+__all__ = ["MutableIndex"]
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+class MutableIndex:
+    """Host-side mutable mirror of a (CompactIndex, HostStore) pair.
+
+    ``slab``: extra node rows appended to EVERY cluster's budget — the
+    bounded append headroom. ``capacity``: total host vector rows (global
+    ids must stay below it); defaults to ``N + n_clusters * slab`` so the
+    slabs can actually fill. Construction canonicalizes every cluster
+    through the same ``_encode_cluster`` path ``compact()`` uses, so the
+    initial state is already bitwise a from-scratch build at the mutable
+    budget.
+    """
+
+    def __init__(self, index: CompactIndex, host: HostStore,
+                 icfg: IndexConfig, *, slab: int = 0,
+                 capacity: int | None = None):
+        if slab < 0:
+            raise ValueError(f"slab must be >= 0, got {slab}")
+        self.icfg = icfg
+        self.slab = int(slab)
+        c, m = index.n_clusters, index.budget
+        self.budget = m + self.slab
+        if icfg.knn_k > m - 1:
+            raise ValueError(
+                f"knn_k={icfg.knn_k} must be <= budget-1={m - 1} so graph "
+                f"construction is invariant to the slab padding")
+        n0 = int(np.asarray(host.vectors).shape[0])
+        cap = n0 + c * self.slab if capacity is None else int(capacity)
+        if cap < n0:
+            raise ValueError(f"capacity {cap} < existing {n0} vectors")
+        self.capacity = cap
+
+        # frozen routing state — mutation never moves or re-trains these
+        self.centroids = np.asarray(index.centroids, np.float32)
+        self.rotation = jnp.asarray(index.rotation)
+        self.dim = index.dim
+
+        # host vector store, pre-allocated to capacity (shape-stable)
+        dimv = np.asarray(host.vectors).shape[1]
+        self.vectors = np.zeros((cap, dimv), np.float32)
+        self.vectors[:n0] = np.asarray(host.vectors)
+
+        # per-cluster mirrors at the mutable budget M' = M + slab
+        b = self.budget
+        w = np.asarray(index.codes).shape[2]
+        r = np.asarray(index.neighbors).shape[2]
+        self.codes = np.zeros((c, b, w), np.uint8)
+        self.f_add = np.full((c, b), _INT32_MAX, np.int32)
+        self.neighbors = np.full((c, b, r), -1, np.int32)
+        self.node_ids = np.full((c, b), -1, np.int32)   # SERVED ids: -1 =
+        self.slot_gid = np.full((c, b), -1, np.int32)   # hole/tombstone;
+        # slot_gid keeps the gid through a tombstone so the dead node's
+        # vector stays addressable for graph geometry until compaction
+        self.residual_norm = np.zeros((c, b), np.float32)
+        self.cos_theta = np.ones((c, b), np.float32)
+        self.entry = np.zeros((c,), np.int32)
+        self.n_valid = np.zeros((c,), np.int32)         # occupied prefix len
+        self.alpha = np.zeros((c,), np.float32)
+        self.rho = np.zeros((c,), np.float32)
+        self.shift1 = np.zeros((c,), np.int32)
+        self.shift2 = np.zeros((c,), np.int32)
+        self.tomb = np.zeros((c, b), bool)              # occupied-but-dead
+
+        self.loc: dict[int, tuple[int, int]] = {}       # gid -> (c, slot)
+        self._tomb_cluster: dict[int, int] = {}         # dead gid -> cluster
+        self.dirty: set[int] = set()
+        self.version = 0
+
+        # canonicalize every cluster at the mutable budget (same path as
+        # compact(), so an unmutated snapshot == rebuild() bitwise)
+        nid0 = np.asarray(index.node_ids)
+        for cid in range(c):
+            gids = np.sort(nid0[cid][nid0[cid] >= 0]).astype(np.int64)
+            if gids.size and gids[-1] >= cap:
+                raise ValueError(
+                    f"global id {int(gids[-1])} >= capacity {cap}")
+            self._write_cluster(cid, gids)
+            for s, g in enumerate(gids):
+                self.loc[int(g)] = (cid, s)
+        self.dirty.clear()
+
+    # -- construction convenience --------------------------------------------
+    @classmethod
+    def build(cls, key, x: np.ndarray, icfg: IndexConfig, *, slab: int = 0,
+              capacity: int | None = None, verbose: bool = False
+              ) -> "MutableIndex":
+        idx, host = compact_index_mod.build_compact_index(
+            key, x, icfg, verbose=verbose)
+        return cls(idx, host, icfg, slab=slab, capacity=capacity)
+
+    def to_engine(self, scfg, *, n_shards: int = 1,
+                  freq: np.ndarray | None = None, buckets=None):
+        """A PIMCQGEngine over the current snapshot (same placement recipe
+        as PIMCQGEngine.build). Later mutations reach it via
+        ``engine.refresh(*mut.snapshot())`` — shapes never change."""
+        from . import engine as engine_mod
+        from . import placement as placement_mod
+        idx, host = self.snapshot()
+        sizes = np.asarray(idx.n_valid)
+        bpc = sizes * compact_bytes_per_node(self.icfg.dim, self.icfg.degree)
+        if freq is None:
+            freq = sizes.astype(np.float64)
+        pl = placement_mod.greedy_place(freq, bpc, n_shards)
+        return engine_mod.PIMCQGEngine(idx, host, pl, self.icfg, scfg,
+                                       buckets=buckets)
+
+    # -- bookkeeping helpers --------------------------------------------------
+    @property
+    def n_clusters(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def n_live(self) -> int:
+        return len(self.loc)
+
+    def live_ids(self) -> np.ndarray:
+        return np.sort(np.fromiter(self.loc, np.int64, len(self.loc)))
+
+    def _cluster_x(self, c: int) -> np.ndarray:
+        """(budget, D) slot vectors — tombstones keep their geometry, free
+        slots are zero (never referenced: prune candidates are occupied)."""
+        x = np.zeros((self.budget, self.vectors.shape[1]), np.float32)
+        occ = self.slot_gid[c] >= 0
+        x[occ] = self.vectors[self.slot_gid[c][occ]]
+        return x
+
+    def _write_cluster(self, c: int, gids: np.ndarray):
+        """Re-encode cluster ``c`` from its live set (ascending gids) via
+        the offline build path — the single canonical array producer that
+        construction, compact() and rebuild() all share."""
+        b = self.budget
+        n = len(gids)
+        if n > b:
+            raise ValueError(f"cluster {c} holds {n} live nodes > budget {b}")
+        vecs = np.zeros((b, self.vectors.shape[1]), np.float32)
+        vecs[:n] = self.vectors[gids]
+        valid = np.zeros((b,), bool)
+        valid[:n] = True
+        out = compact_index_mod._encode_cluster(
+            jnp.asarray(vecs), jnp.asarray(valid),
+            jnp.asarray(self.centroids[c]), self.rotation, self.icfg)
+        self.codes[c] = np.asarray(out["codes"])
+        self.f_add[c] = np.asarray(out["f_add"])
+        self.neighbors[c] = np.asarray(out["neighbors"])
+        self.entry[c] = int(out["entry"])
+        self.n_valid[c] = n
+        self.residual_norm[c] = np.asarray(out["residual_norm"])
+        self.cos_theta[c] = np.asarray(out["cos_theta"])
+        self.alpha[c] = float(out["alpha"])
+        self.rho[c] = float(out["rho"])
+        self.shift1[c] = int(out["shift1"])
+        self.shift2[c] = int(out["shift2"])
+        self.node_ids[c] = -1
+        self.node_ids[c, :n] = gids
+        self.slot_gid[c] = self.node_ids[c]
+        self.tomb[c] = False
+
+    # -- mutation: delete -----------------------------------------------------
+    def delete(self, ids) -> int:
+        """Tombstone live global ids. Validates the whole batch before
+        touching anything (all-or-nothing). Returns the delete count."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        if len(set(ids.tolist())) != len(ids):
+            raise ValueError("duplicate ids in delete batch")
+        missing = [int(g) for g in ids if int(g) not in self.loc]
+        if missing:
+            raise ValueError(f"ids not live (unknown or already deleted): "
+                             f"{missing[:8]}")
+        for g in ids:
+            g = int(g)
+            c, s = self.loc.pop(g)
+            self.node_ids[c, s] = -1       # invisible to rerank/results now
+            self.tomb[c, s] = True         # ...but still a graph waypoint
+            self._tomb_cluster[g] = c
+            self.dirty.add(c)
+        self.version += 1
+        return len(ids)
+
+    # -- mutation: insert -----------------------------------------------------
+    def insert(self, ids, vecs) -> int:
+        """Append new (gid, vector) pairs into their owning clusters' slabs.
+
+        Routing is nearest-FROZEN-centroid; encoding is bitwise the
+        offline path; graph linking is the offline prune. Raises (without
+        partial effects) when a target cluster's slab is full — call
+        ``compact()`` to reclaim tombstones first."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        vecs = np.asarray(vecs, np.float32)
+        if vecs.ndim == 1:
+            vecs = vecs[None]
+        if len(ids) != len(vecs):
+            raise ValueError(f"{len(ids)} ids for {len(vecs)} vectors")
+        if vecs.shape[1] != self.dim:
+            raise ValueError(f"dim {vecs.shape[1]} != index dim {self.dim}")
+        if len(set(ids.tolist())) != len(ids):
+            raise ValueError("duplicate ids in insert batch")
+        for g in ids.tolist():
+            if g < 0 or g >= self.capacity:
+                raise ValueError(f"id {g} outside [0, capacity={self.capacity})"
+                                 f" — build with a larger capacity")
+            if g in self.loc:
+                raise ValueError(f"id {g} is already live")
+            if g in self._tomb_cluster:
+                raise ValueError(f"id {g} is tombstoned; compact() before "
+                                 f"reusing it")
+        assign = np.asarray(ivf.assign(jnp.asarray(vecs),
+                                       jnp.asarray(self.centroids)))
+        # validate slab room for the WHOLE batch before any write
+        need = np.bincount(assign, minlength=self.n_clusters)
+        free = self.budget - self.n_valid
+        over = np.nonzero(need > free)[0]
+        if over.size:
+            c = int(over[0])
+            raise ValueError(
+                f"append slab full for cluster {c} "
+                f"({int(need[c])} inserts, {int(free[c])} free slots); "
+                f"compact() to reclaim tombstones")
+        for c in np.unique(assign):
+            c = int(c)
+            sel = np.nonzero(assign == c)[0]
+            self._insert_into_cluster(c, ids[sel], vecs[sel])
+            self.dirty.add(c)
+        self.version += 1
+        return len(ids)
+
+    def _insert_into_cluster(self, c: int, gids: np.ndarray,
+                             vecs: np.ndarray):
+        k = len(gids)
+        base = int(self.n_valid[c])
+        slots = np.arange(base, base + k)
+        # the offline encode, row-independent — bitwise the rebuild codes
+        codes = rabitq.encode(jnp.asarray(vecs),
+                              jnp.asarray(self.centroids[c]),
+                              self.rotation, dim=self.icfg.dim)
+        self.codes[c, slots] = np.asarray(codes.packed)
+        self.residual_norm[c, slots] = np.asarray(codes.residual_norm)
+        self.cos_theta[c, slots] = np.asarray(codes.cos_theta)
+        self.f_add[c, slots] = np.asarray(
+            mulfree.fold_node_factor(codes.residual_norm))
+        self.node_ids[c, slots] = gids
+        self.slot_gid[c, slots] = gids
+        self.vectors[gids] = vecs
+        self.n_valid[c] = base + k
+        for s, g in zip(slots, gids):
+            self.loc[int(g)] = (c, int(s))
+        self._link_new(c, slots)
+
+    def _link_new(self, c: int, slots: np.ndarray):
+        """Link appended nodes into the cluster graph via the offline
+        Vamana prune (``_robust_prune_row``): out-edges from the pruned
+        kNN pool, backlinks by re-pruning each touched neighbor row."""
+        x = self._cluster_x(c)
+        occ = int(self.n_valid[c])           # occupied prefix (live + tomb)
+        r = self.icfg.degree
+        alpha = self.icfg.prune_alpha
+        xj = jnp.asarray(x)
+        for m in slots:
+            m = int(m)
+            d = ((x[:occ] - x[m]) ** 2).sum(1).astype(np.float32)
+            d[m] = np.inf
+            kk = min(self.icfg.knn_k, max(occ - 1, 1))
+            order = np.lexsort((np.arange(occ), d))[:kk]
+            pruned = np.asarray(graph_mod._robust_prune_row(
+                jnp.asarray(order.astype(np.int32)),
+                jnp.asarray(d[order]), xj, r, alpha))
+            self.neighbors[c, m] = pruned
+            for p in pruned[pruned >= 0]:
+                p = int(p)
+                nb = self.neighbors[c, p]
+                nb = nb[nb >= 0]
+                if m in nb:
+                    continue
+                if len(nb) < r:              # room: plain append
+                    self.neighbors[c, p, len(nb)] = m
+                    continue
+                cand = np.concatenate([nb, [m]]).astype(np.int32)
+                dp = ((x[cand] - x[p]) ** 2).sum(1).astype(np.float32)
+                corder = np.lexsort((cand, dp))
+                row = np.asarray(graph_mod._robust_prune_row(
+                    jnp.asarray(cand[corder]), jnp.asarray(dp[corder]),
+                    xj, r, alpha))
+                self.neighbors[c, p] = row
+
+    # -- compaction -----------------------------------------------------------
+    def compact(self, clusters=None) -> list[int]:
+        """Rebuild dirty clusters offline from their live sets — reclaims
+        tombstones and slab fragmentation, refreshes alpha/rho/graph/entry.
+        A compacted cluster is bitwise identical to ``rebuild()``'s version
+        of it. Returns the cluster ids compacted."""
+        targets = sorted(self.dirty) if clusters is None \
+            else sorted(int(c) for c in np.atleast_1d(clusters))
+        for c in targets:
+            if not 0 <= c < self.n_clusters:
+                raise ValueError(f"cluster {c} out of range")
+            gids = np.sort(
+                self.node_ids[c][self.node_ids[c] >= 0]).astype(np.int64)
+            self._write_cluster(c, gids)
+            for s, g in enumerate(gids):
+                self.loc[int(g)] = (c, s)
+            for g in [g for g, cc in self._tomb_cluster.items() if cc == c]:
+                del self._tomb_cluster[g]
+            self.dirty.discard(c)
+        if targets:
+            self.version += 1
+        return targets
+
+    # -- export ---------------------------------------------------------------
+    def snapshot(self) -> tuple[CompactIndex, HostStore]:
+        """The current state as served arrays — identical shapes every
+        call, so engines refresh without recompiling."""
+        idx = CompactIndex(
+            codes=jnp.asarray(self.codes), f_add=jnp.asarray(self.f_add),
+            neighbors=jnp.asarray(self.neighbors),
+            entry=jnp.asarray(self.entry), n_valid=jnp.asarray(self.n_valid),
+            node_ids=jnp.asarray(self.node_ids),
+            centroids=jnp.asarray(self.centroids),
+            alpha=jnp.asarray(self.alpha), rho=jnp.asarray(self.rho),
+            shift1=jnp.asarray(self.shift1), shift2=jnp.asarray(self.shift2),
+            residual_norm=jnp.asarray(self.residual_norm),
+            cos_theta=jnp.asarray(self.cos_theta),
+            rotation=self.rotation, dim=self.dim)
+        host = HostStore(vectors=jnp.asarray(self.vectors),
+                         centroids=jnp.asarray(self.centroids))
+        return idx, host
+
+    def rebuild(self) -> tuple[CompactIndex, HostStore]:
+        """From-scratch rebuild of the CURRENT live set under the frozen
+        routing (same centroids/rotation/budget) — the parity reference:
+        after ``compact()``, ``snapshot()`` equals this bitwise."""
+        ref = MutableIndex.__new__(MutableIndex)
+        ref.__dict__.update({
+            k: (v.copy() if isinstance(v, np.ndarray) else v)
+            for k, v in self.__dict__.items()
+            if k not in ("loc", "_tomb_cluster", "dirty")})
+        ref.loc, ref._tomb_cluster, ref.dirty = {}, {}, set()
+        by_cluster: dict[int, list[int]] = {}
+        for g, (c, _) in self.loc.items():
+            by_cluster.setdefault(c, []).append(g)
+        for c in range(ref.n_clusters):
+            gids = np.sort(np.asarray(by_cluster.get(c, []), np.int64))
+            ref._write_cluster(c, gids)
+            for s, g in enumerate(gids):
+                ref.loc[int(g)] = (c, s)
+        return ref.snapshot()
+
+    # -- churn-honest memory accounting ---------------------------------------
+    def cluster_bytes(self) -> tuple[np.ndarray, np.ndarray]:
+        """(spoken_for, reclaimable) compact bytes per cluster: the full
+        padded budget is spoken for (slab headroom is a promise to future
+        inserts), tombstoned rows are reclaimable at the next compact()."""
+        bpn = compact_bytes_per_node(self.icfg.dim, self.icfg.degree)
+        spoken = np.full(self.n_clusters, self.budget * bpn, np.float64)
+        reclaimable = self.tomb.sum(axis=1).astype(np.float64) * bpn
+        return spoken, reclaimable
+
+    def footprint(self) -> dict:
+        n_tomb = int(self.tomb.sum())
+        reserved = self.n_clusters * self.budget - self.n_live - n_tomb
+        return compact_index_mod.footprint_report(
+            self.icfg.dim, self.icfg.degree, self.n_live,
+            tombstoned=n_tomb, slab=reserved)
+
+    def __repr__(self) -> str:
+        return (f"MutableIndex(clusters={self.n_clusters}, "
+                f"budget={self.budget} (slab {self.slab}), "
+                f"live={self.n_live}, tombstones={int(self.tomb.sum())}, "
+                f"dirty={sorted(self.dirty)}, version={self.version})")

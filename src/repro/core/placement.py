@@ -30,6 +30,10 @@ class Placement:
     per_shard: int             # clusters per shard (padded equal)
     load: np.ndarray           # (S,) final per-shard load estimate
     mem: np.ndarray | None = None  # (S,) final per-shard compact-index bytes
+    mem_reclaimable: np.ndarray | None = None
+    # (S,) per-shard bytes held by tombstoned rows — resident (and counted
+    # in ``mem`` against the budget: slabs/tombstones still occupy PU
+    # memory) but recoverable at the next compaction
 
     def permute(self, arr: np.ndarray) -> np.ndarray:
         """Reorder a (C, ...) cluster-stacked array into shard-major order."""
@@ -46,12 +50,17 @@ class Placement:
 
 def greedy_place(freq: np.ndarray, bytes_per_cluster: np.ndarray,
                  n_shards: int, mem_budget: int | None = None,
-                 strict: bool = False) -> Placement:
+                 strict: bool = False,
+                 reclaimable: np.ndarray | None = None) -> Placement:
     """LPT-style greedy: clusters in decreasing (freq-weighted) load order,
     each to the least-loaded shard with both load- and memory-headroom.
 
     freq: (C,) estimated/profiled access frequency (queries hitting the
-    cluster); bytes_per_cluster: (C,) compact-index bytes.
+    cluster); bytes_per_cluster: (C,) compact-index bytes. Under churn the
+    caller bills SPOKEN-FOR bytes here (live + tombstoned + append-slab
+    headroom — all resident on the PU, so ``mem_budget`` stays honest) and
+    passes the tombstoned portion as ``reclaimable`` (C,) so the per-shard
+    report splits what a compaction would recover (``mem_reclaimable``).
 
     mem_budget caps per-shard bytes. By default it is a soft constraint
     (fall back to the least-loaded open shard if no shard has headroom);
@@ -93,6 +102,15 @@ def greedy_place(freq: np.ndarray, bytes_per_cluster: np.ndarray,
     for s in range(n_shards):
         members = order[s * per_shard:(s + 1) * per_shard]
         local_slot[members] = np.arange(per_shard)
+    mem_rec = None
+    if reclaimable is not None:
+        reclaimable = np.asarray(reclaimable, np.float64)
+        if reclaimable.shape != (c,):
+            raise ValueError(f"reclaimable shape {reclaimable.shape} != "
+                             f"({c},)")
+        mem_rec = np.zeros(n_shards, np.float64)
+        np.add.at(mem_rec, shard_of, reclaimable)
     return Placement(order=order.astype(np.int32), shard_of=shard_of,
                      local_slot=local_slot, n_shards=n_shards,
-                     per_shard=per_shard, load=load, mem=mem)
+                     per_shard=per_shard, load=load, mem=mem,
+                     mem_reclaimable=mem_rec)

@@ -56,12 +56,14 @@ import dataclasses
 import functools
 import math
 import time
+import warnings
 from collections import deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import autoscale as autoscale_mod
 from . import compact_index as compact_index_mod
 from . import engine as engine_mod
 from . import execbackend as execbackend_mod
@@ -74,7 +76,8 @@ from ..distributed.straggler import DeadlineReissue, HedgeConfig
 
 __all__ = ["AdmissionController", "ReplicaGroup", "ShardGroup",
            "ShardWorker", "ShardedSink", "ServingTopology", "TopologyReport",
-           "MeshShardWorker", "MeshShardGroup", "ShardHedge", "TenantSpec",
+           "TopologyConfig", "MeshShardWorker", "MeshShardGroup",
+           "ShardHedge", "TenantSpec",
            "replicate_engine", "partition_index", "topology"]
 
 ROUTE_POLICIES = ("round-robin", "least-in-flight")
@@ -107,7 +110,7 @@ def replicate_engine(eng, n: int, *, share_executables: bool = True) -> list:
 
 def partition_index(eng, n_parts: int, *, mem_budget: int | None = None,
                     strict: bool = False, modes=None, inner_shards: int = 1,
-                    freq: np.ndarray | None = None
+                    freq: np.ndarray | None = None, mutable: bool = False
                     ) -> tuple[list, placement_mod.Placement]:
     """Slice one built engine's clusters into ``n_parts`` disjoint engines.
 
@@ -123,6 +126,11 @@ def partition_index(eng, n_parts: int, *, mem_budget: int | None = None,
     count. The host store (raw rerank vectors, global-id addressed) stays
     shared: per-shard rerank needs no id translation.
 
+    ``mutable=True`` switches the byte accounting to spoken-for rows
+    (full cluster budget — tombstones and append-slab headroom stay
+    resident on the PU) and reports the tombstoned bytes as
+    ``placement.mem_reclaimable``.
+
     Returns (engines, placement); ``placement.shard_of``/``local_slot``
     are the owner map and per-owner local cluster ids the scatter router
     consumes."""
@@ -133,13 +141,23 @@ def partition_index(eng, n_parts: int, *, mem_budget: int | None = None,
                          f"partitions")
     idx, icfg = eng.index, eng.icfg
     sizes = np.asarray(idx.n_valid).astype(np.float64)
-    bpc = sizes * compact_index_mod.compact_bytes_per_node(icfg.dim,
-                                                           icfg.degree)
+    bpn = compact_index_mod.compact_bytes_per_node(icfg.dim, icfg.degree)
+    reclaimable = None
+    if mutable:
+        # a churning index keeps every padded row resident: bill the FULL
+        # budget per cluster (live + tombstones + append-slab headroom all
+        # occupy PU memory, so mem_budget enforcement stays honest) and
+        # report the tombstoned portion as reclaimable-at-compaction
+        bpc = np.full(len(sizes), float(idx.budget) * bpn)
+        live = (np.asarray(idx.node_ids) >= 0).sum(axis=1).astype(np.float64)
+        reclaimable = (sizes - live) * bpn
+    else:
+        bpc = sizes * bpn
     if freq is None:
         freq = sizes                      # popularity ~ size as prior
     pl = placement_mod.greedy_place(np.asarray(freq, np.float64), bpc,
                                     n_parts, mem_budget=mem_budget,
-                                    strict=strict)
+                                    strict=strict, reclaimable=reclaimable)
     engines = []
     for o in range(n_parts):
         members = pl.members(o)
@@ -926,7 +944,9 @@ class ServingTopology:
                  backpressure: bool = True,
                  exec: str = "inproc",
                  hedge: HedgeConfig | None = None,
-                 tenants=None):
+                 tenants=None,
+                 placement=None, mutable: bool = False,
+                 autoscale=None):
         self.groups = [list(g) for g in groups]
         if not self.groups or any(not g for g in self.groups):
             raise ValueError("ServingTopology needs at least one engine in "
@@ -1039,6 +1059,28 @@ class ServingTopology:
             self._exec.prepare(self)
         self.tenants = self._resolve_tenants(tenants)
 
+        # -- day-2 operations: live mutation swaps + replica autoscaling --
+        self.placement = placement
+        self.mutable = bool(mutable)
+        if self.mutable and self.sharded and placement is None:
+            raise ValueError(
+                "a mutable SHARDED topology needs the cluster Placement "
+                "(placement=...) so apply() can re-slice partitions; "
+                "topology()/TopologyConfig.build pass it automatically")
+        if autoscale is not None:
+            if not isinstance(autoscale, autoscale_mod.AutoscalePolicy):
+                raise ValueError(
+                    f"autoscale must be an AutoscalePolicy, "
+                    f"got {type(autoscale).__name__}")
+            if self._exec.name == "mesh":
+                raise ValueError(
+                    "autoscaling resizes in-process replica groups; "
+                    "exec='mesh' pins one device per shard group (scale by "
+                    "launching processes, or use exec='inproc')")
+        self.autoscaler = autoscale_mod.Autoscaler(self, autoscale) \
+            if autoscale is not None else None
+        self._active = None        # (root, sink) of the in-progress run
+
     def _resolve_tenants(self, tenants) -> list[TenantSpec] | None:
         """Validate the tenant registry against this topology's shape;
         None = untenanted (run() synthesizes a single default tenant)."""
@@ -1131,6 +1173,94 @@ class ServingTopology:
                 jnp.full((b, self.fanout * self.k), -1, jnp.int32),
                 jnp.full((b, self.fanout * self.k), jnp.inf, jnp.float32))
             np.asarray(out[0])
+
+    # -- day-2 operations: replica scaling + live mutation swaps --------------
+    def scale_replicas(self, group: int, n: int) -> int:
+        """Resize shard ``group`` to ``n`` replicas. New replicas are
+        ``copy.copy`` views sharing the group's placed index AND compile
+        cache — scaling adds schedulable capacity, not device memory or
+        retraces. Worker trees are built per ``run()``, so a resize takes
+        effect at the next stream and never races an in-flight one.
+        Returns the group's new replica count."""
+        if self._exec.name == "mesh":
+            raise ValueError(
+                "exec='mesh' pins one device per shard group; replica "
+                "scaling there means launching processes, not copying "
+                "engines (use exec='inproc')")
+        if not 0 <= group < len(self.groups):
+            raise ValueError(f"group {group} outside "
+                             f"0..{len(self.groups) - 1}")
+        if n < 1:
+            raise ValueError(f"need at least one replica, got {n}")
+        g = self.groups[group]
+        while len(g) < n:
+            g.append(copy.copy(g[0]))
+        while len(g) > n:
+            g.pop()
+        return len(g)
+
+    def apply(self, mut) -> None:
+        """Swap a ``MutableIndex``'s current state into the live topology
+        without dropping queries.
+
+        Mechanics: every engine's ``placed``/``host`` arrays enter the
+        compiled search step as jit ARGUMENTS read at flush-dispatch time,
+        so the swap is atomic at flush granularity — flushes already on
+        device complete against the old arrays, the next flush dispatches
+        against the new ones. Mid-run (from a ``run(ticker=...)``
+        callback) we first drain the in-flight FIFOs so no stream mixes
+        index versions across its merge. Shapes are stable by the
+        ``MutableIndex`` contract (cluster budget + host capacity are
+        pre-allocated), so ``engine.refresh`` re-places through
+        ``elastic.reshard_like`` with zero retraces — ``warm()`` after an
+        ``apply()`` is a no-op, pinned in the churn bench."""
+        if not self.mutable:
+            raise ValueError("apply() needs a mutable topology "
+                             "(TopologyConfig(mutable=True) or "
+                             "ServingTopology(mutable=True, ...))")
+        idx, host = mut.snapshot()
+        if self._active is not None:
+            # drain: finish every flush dispatched against the old arrays
+            # before swapping; queries still buffered in the admission/
+            # FIFO queues will dispatch against the new index
+            root, _sink = self._active
+            while root.block_harvest_one():
+                pass
+            root.harvest()
+        if not self.sharded:
+            leader = self.groups[0][0]
+            leader.refresh(idx, host)
+            for e in self.groups[0][1:]:
+                e.index, e.placed, e.host = \
+                    leader.index, leader.placed, leader.host
+        else:
+            if idx.n_clusters != len(self.part_of):
+                raise ValueError(
+                    f"index has {idx.n_clusters} clusters but this "
+                    f"topology partitions {len(self.part_of)} — the "
+                    f"mutable tier never changes the cluster count")
+            pl = self.placement
+            for o, g in enumerate(self.groups):
+                members = pl.members(o)
+                sub = compact_index_mod.CompactIndex(
+                    codes=idx.codes[members], f_add=idx.f_add[members],
+                    neighbors=idx.neighbors[members],
+                    entry=idx.entry[members], n_valid=idx.n_valid[members],
+                    node_ids=idx.node_ids[members],
+                    centroids=idx.centroids[members],
+                    alpha=idx.alpha[members], rho=idx.rho[members],
+                    shift1=idx.shift1[members], shift2=idx.shift2[members],
+                    residual_norm=idx.residual_norm[members],
+                    cos_theta=idx.cos_theta[members],
+                    rotation=idx.rotation, dim=idx.dim)
+                leader = g[0]
+                leader.refresh(sub, host)
+                for e in g[1:]:
+                    e.index, e.placed, e.host = \
+                        leader.index, leader.placed, leader.host
+            self.vectors = host.vectors
+            if self._exec.name == "mesh":
+                self._exec.refresh(self)
 
     # -- scatter routing ------------------------------------------------------
     def _route_probes(self, q: np.ndarray, backend, specs=None,
@@ -1249,8 +1379,8 @@ class ServingTopology:
         return children
 
     # -- the run loop ---------------------------------------------------------
-    def run(self, queries, arrival_times=None, backend=None, tenant=None
-            ) -> TopologyReport:
+    def run(self, queries, arrival_times=None, backend=None, tenant=None,
+            ticker=None) -> TopologyReport:
         """Replay a (possibly timed) stream through the topology; see
         StreamingScheduler.run for the arrival-replay semantics. ``backend``
         (None | registry key | per-query sequence of keys/None) restricts
@@ -1264,7 +1394,9 @@ class ServingTopology:
         k/nprobe/adaptive_tau override the engines' effort for that
         tenant's rows. Untagged runs on an untenanted topology are the
         single-default-tenant special case — bit-identical to the PR 5
-        FIFO."""
+        FIFO. ``ticker`` (callable, receives the stream clock) is invoked
+        once per scheduler iteration — the seam mid-stream mutation swaps
+        (``apply`` from inside a churn workload) hook into."""
         q = np.asarray(queries, np.float32)
         n = len(q)
         arr = np.zeros(n) if arrival_times is None \
@@ -1318,15 +1450,45 @@ class ServingTopology:
         shed_wait = np.full(n, np.nan)
         quantum = max(1, min(self.fill_threshold, self.buckets[-1]))
         merge_sizes: list = []
-        i = 0
 
         def shed_one(idx: int, wait: float):
             shed[idx] = True
             shed_wait[idx] = wait
 
+        self._active = (root, sink)
+        try:
+            self._run_loop(root, sink, adm, arr, order, n, shed_one,
+                           quantum, merge_sizes, ticker)
+        finally:
+            self._active = None
+        makespan = sink.now()
+        # per-tenant k: truncate the tenant's result rows to its promised
+        # depth (prefix of the full-k row — the merge output is sorted)
+        for t, s in enumerate(specs):
+            if s.k is not None and s.k < self.k:
+                rows = (tenant_of == t) & ~shed
+                sink.out_ids[rows, s.k:] = -1
+                sink.out_d[rows, s.k:] = np.inf
+        if isinstance(root, MeshShardGroup):
+            run_groups = [[root.worker]]  # one worker drives every shard
+        elif self.sharded:
+            run_groups = [list(c.children) for c in root.children]
+        else:
+            run_groups = [list(root.children)]
+        return self._report(sink, shed, shed_wait, pending, merge_sizes,
+                            makespan, n, run_groups, hedge_rt,
+                            specs=specs, tenant_of=tenant_of, adm=adm,
+                            served=served)
+
+    def _run_loop(self, root, sink, adm, arr, order, n, shed_one,
+                  quantum, merge_sizes, ticker):
+        """The admission -> deal -> pump -> harvest -> merge scheduler."""
+        i = 0
         while i < n or len(adm) or not root.idle() \
                 or (self.sharded and sink.ready):
             t = sink.now()
+            if ticker is not None:
+                ticker(t)
             # 1. arrivals -> bounded admission queues (overflow sheds now:
             # the arrival under drop-new, the tenant's oldest under
             # drop-old)
@@ -1368,24 +1530,6 @@ class ServingTopology:
             # frees a slot
             dt = nxt - sink.now()
             time.sleep(min(max(dt, 5e-5), 5e-4))
-        makespan = sink.now()
-        # per-tenant k: truncate the tenant's result rows to its promised
-        # depth (prefix of the full-k row — the merge output is sorted)
-        for t, s in enumerate(specs):
-            if s.k is not None and s.k < self.k:
-                rows = (tenant_of == t) & ~shed
-                sink.out_ids[rows, s.k:] = -1
-                sink.out_d[rows, s.k:] = np.inf
-        if isinstance(root, MeshShardGroup):
-            run_groups = [[root.worker]]  # one worker drives every shard
-        elif self.sharded:
-            run_groups = [list(c.children) for c in root.children]
-        else:
-            run_groups = [list(root.children)]
-        return self._report(sink, shed, shed_wait, pending, merge_sizes,
-                            makespan, n, run_groups, hedge_rt,
-                            specs=specs, tenant_of=tenant_of, adm=adm,
-                            served=served)
 
     def _resolve_stream_tenants(self, tenant, n: int):
         """Map run(tenant=...) onto the registry: (specs, tenant_of)."""
@@ -1539,42 +1683,141 @@ class ServingTopology:
             cluster_hits=cluster_hits)
 
 
-def topology(eng, *, shards: int = 1, replicas: int = 1,
-             mem_budget: int | None = None, strict: bool = False,
-             modes=None, inner_shards: int = 1,
-             freq: np.ndarray | None = None,
-             share_executables: bool = True, **kw) -> ServingTopology:
-    """Build a serving topology over one built engine: ``shards`` disjoint
-    cluster partitions (capacity), each replicated ``replicas`` ways
-    (throughput), behind tier-wide admission control.
+@dataclasses.dataclass(frozen=True)
+class TopologyConfig:
+    """The typed serving-tier spec (day-2 API redesign, ROADMAP item 1).
 
-    shards=1 replicates the whole index (the FleetScheduler shape);
-    replicas=1 with shards=N is the pure sharded tier (ShardedFleet
-    shape); both > 1 is the hybrid — partition for memory, replicate each
-    partition for load, with shedding/backpressure/heterogeneous routing
-    (``modes``, one backend per shard) working uniformly.
+    One validated object replaces the kwarg sprawl that ``topology()``
+    accumulated across five PRs: shape (``shards``/``replicas``/
+    ``modes``/``inner_shards``), streaming (``buckets`` ... ``max_batch``),
+    overload (``admission_depth``/``shed_deadline_s``/``backpressure``),
+    execution (``exec``/``hedge``), tenancy (``tenants``), and the new
+    day-2 switches — ``mutable`` (serve a ``MutableIndex`` and accept
+    live ``apply()`` swaps, with spoken-for memory accounting in the
+    partitioner) and ``autoscale`` (an ``AutoscalePolicy`` driving
+    between-run replica scaling from ``TopologyReport`` signals).
 
-    ``mem_budget``/``strict``/``freq``/``inner_shards`` flow to the
-    cluster partitioning (see ``partition_index``); every other keyword
-    flows to ``ServingTopology`` (route, buckets, fill_threshold,
-    wait_limit_s, fifo_depth, admission_depth, shed_deadline_s,
-    backpressure, ...)."""
-    if replicas < 1:
-        raise ValueError(f"need at least one replica, got {replicas}")
-    if shards < 1:
-        raise ValueError(f"need at least one shard, got {shards}")
-    if shards == 1:
-        if modes is not None:
+    Build with ``cfg.build(eng)`` (or ``topology(eng, config=cfg)``).
+    Configs are frozen: derive variants with ``dataclasses.replace``.
+    Validation is front-loaded — a config that constructs will build
+    (shape/engine mismatches still surface at build time, where the
+    engine is first seen).
+
+    Migration from the deprecated kwarg form::
+
+        topology(eng, shards=2, replicas=2, buckets=(8, 16))   # before
+        TopologyConfig(shards=2, replicas=2,
+                       buckets=(8, 16)).build(eng)             # after
+
+    ``freq`` (per-cluster access frequency) stays a ``build`` argument:
+    it is measured data about one corpus, not topology policy."""
+
+    # -- shape ---------------------------------------------------------------
+    shards: int = 1
+    replicas: int = 1
+    mem_budget: int | None = None
+    strict: bool = False
+    modes: tuple | None = None
+    inner_shards: int = 1
+    share_executables: bool = True
+    # -- streaming -----------------------------------------------------------
+    route: str = "least-in-flight"
+    buckets: tuple | None = None
+    costs: StageCosts | None = None
+    fill_threshold: int | None = None
+    wait_limit_s: float = 2e-3
+    fifo_depth: int = 4
+    max_batch: int = 64
+    # -- overload ------------------------------------------------------------
+    admission_depth: int | str | None = "auto"
+    shed_deadline_s: float | None = None
+    backpressure: bool = True
+    # -- execution -----------------------------------------------------------
+    exec: str | object = "inproc"
+    hedge: HedgeConfig | None = None
+    # -- tenancy -------------------------------------------------------------
+    tenants: tuple | None = None
+    # -- day-2 operations ----------------------------------------------------
+    mutable: bool = False
+    autoscale: autoscale_mod.AutoscalePolicy | None = None
+
+    def __post_init__(self):
+        if self.replicas < 1:
+            raise ValueError(
+                f"need at least one replica, got {self.replicas}")
+        if self.shards < 1:
+            raise ValueError(f"need at least one shard, got {self.shards}")
+        if self.modes is not None and self.shards == 1:
             raise ValueError("modes (per-shard backends) needs shards >= 2")
-        return ServingTopology(
-            [replicate_engine(eng, replicas,
-                              share_executables=share_executables)], **kw)
-    parts, pl = partition_index(eng, shards, mem_budget=mem_budget,
-                                strict=strict, modes=modes,
-                                inner_shards=inner_shards, freq=freq)
-    groups = [replicate_engine(p, replicas,
-                               share_executables=share_executables)
-              for p in parts]
-    return ServingTopology(groups, part_of=pl.shard_of,
-                           local_cid=pl.local_slot,
-                           centroids=eng.index.centroids, **kw)
+        if self.route not in ROUTE_POLICIES:
+            raise ValueError(f"route must be one of {ROUTE_POLICIES}, "
+                             f"got {self.route!r}")
+        if self.inner_shards < 1:
+            raise ValueError(
+                f"need at least one inner shard, got {self.inner_shards}")
+        if self.autoscale is not None and not isinstance(
+                self.autoscale, autoscale_mod.AutoscalePolicy):
+            raise ValueError(f"autoscale must be an AutoscalePolicy, "
+                             f"got {type(self.autoscale).__name__}")
+
+    def build(self, eng, *, freq: np.ndarray | None = None
+              ) -> ServingTopology:
+        """Materialize this config over one built engine (or the engine of
+        a ``MutableIndex`` via ``mut.to_engine()``)."""
+        serve_kw = dict(
+            route=self.route, buckets=self.buckets, costs=self.costs,
+            fill_threshold=self.fill_threshold,
+            wait_limit_s=self.wait_limit_s, fifo_depth=self.fifo_depth,
+            max_batch=self.max_batch, admission_depth=self.admission_depth,
+            shed_deadline_s=self.shed_deadline_s,
+            backpressure=self.backpressure, exec=self.exec,
+            hedge=self.hedge, tenants=self.tenants,
+            mutable=self.mutable, autoscale=self.autoscale)
+        if self.shards == 1:
+            return ServingTopology(
+                [replicate_engine(eng, self.replicas,
+                                  share_executables=self.share_executables)],
+                **serve_kw)
+        parts, pl = partition_index(
+            eng, self.shards, mem_budget=self.mem_budget, strict=self.strict,
+            modes=self.modes, inner_shards=self.inner_shards, freq=freq,
+            mutable=self.mutable)
+        groups = [replicate_engine(p, self.replicas,
+                                   share_executables=self.share_executables)
+                  for p in parts]
+        return ServingTopology(groups, part_of=pl.shard_of,
+                               local_cid=pl.local_slot,
+                               centroids=eng.index.centroids,
+                               placement=pl, **serve_kw)
+
+
+def topology(eng, *, config: TopologyConfig | None = None,
+             freq: np.ndarray | None = None, **kw) -> ServingTopology:
+    """Build a serving topology over one built engine.
+
+    The typed form — ``topology(eng, config=TopologyConfig(...))`` or
+    equivalently ``config.build(eng)`` — is the API. The historical kwarg
+    form (``topology(eng, shards=2, replicas=2, buckets=...)``) still
+    works as a thin shim that folds the kwargs into a ``TopologyConfig``
+    and emits a ``DeprecationWarning``; it accepts exactly the config's
+    fields (see ``TopologyConfig`` for the migration recipe). ``freq``
+    (per-cluster access frequency) is data, not policy, and flows to
+    ``TopologyConfig.build`` either way."""
+    if config is not None:
+        if kw:
+            raise ValueError(
+                f"pass EITHER config= OR legacy kwargs, not both "
+                f"(got config plus {sorted(kw)})")
+        if not isinstance(config, TopologyConfig):
+            raise ValueError(f"config must be a TopologyConfig, "
+                             f"got {type(config).__name__}")
+        return config.build(eng, freq=freq)
+    warnings.warn(
+        "topology(eng, shards=..., ...) kwargs are deprecated; build a "
+        "TopologyConfig and call topology(eng, config=cfg) or cfg.build(eng)",
+        DeprecationWarning, stacklevel=2)
+    try:
+        cfg = TopologyConfig(**kw)
+    except TypeError as e:
+        raise TypeError(f"topology() got unknown keyword(s): {e}") from None
+    return cfg.build(eng, freq=freq)

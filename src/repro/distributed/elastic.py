@@ -22,7 +22,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .sharding import resolve_spec
 
-__all__ = ["place", "replace_mesh"]
+__all__ = ["place", "replace_mesh", "reshard_like"]
 
 
 def place(tree: Any, specs: Any, mesh: Mesh) -> Any:
@@ -40,3 +40,21 @@ def replace_mesh(tree: Any, specs: Any, new_mesh: Mesh) -> Any:
     jax, so this is the portable path."""
     host = jax.tree.map(lambda x: jax.device_get(x), tree)
     return place(host, specs, new_mesh)
+
+
+def reshard_like(template: Any, tree: Any) -> Any:
+    """Place NEW arrays in an OLD tree's exact device layout — the live
+    shard-swap path: a compacted/rebuilt index drops into the device
+    placement the serving executables were compiled against, so the swap
+    costs one transfer and zero retraces. Leaves must match the template's
+    shapes (the mutation tier's shape-stability contract)."""
+    def put(t, x):
+        if getattr(t, "shape", None) != getattr(x, "shape", None):
+            raise ValueError(
+                f"reshard_like: shape {getattr(x, 'shape', None)} != "
+                f"template {getattr(t, 'shape', None)} — live swaps demand "
+                f"shape stability (pre-allocate slabs/capacity)")
+        sharding = getattr(t, "sharding", None)
+        return jax.device_put(x, sharding) if sharding is not None \
+            else jax.device_put(x)
+    return jax.tree.map(put, template, tree)

@@ -51,6 +51,15 @@ partitions are assigned the tenants' backends round-robin). Example:
 Malformed entries, non-positive weights, unknown backends, and tenant
 flags without the topology to serve them are argument ERRORS.
 
+--churn F exercises the day-2 streaming-mutation path before retrieval:
+the corpus is indexed through a ``MutableIndex`` (bounded append slabs +
+tombstones), an F fraction is deleted and re-inserted, dirty clusters
+are compacted offline, and the rebuilt state is swapped into the LIVE
+scheduler (``ServingTopology.apply`` on the sharded tier,
+``engine.refresh`` on the single-engine path) with zero recompiles.
+With --fleet > 1 it requires --sharded: the replicated FleetScheduler
+facade carries no mutation path.
+
 --sharded / --replicas without --fleet >= 2 is an argument ERROR, not a
 silent single-engine run.
 """
@@ -68,9 +77,11 @@ import numpy as np
 from ..configs import get_smoke
 from ..core import compact_index, engine
 from ..core.backends import available_backends
-from ..core.fleet import FleetScheduler, TenantSpec, replicate_engine, \
-    topology
+from ..core.fleet import FleetScheduler, TenantSpec, TopologyConfig, \
+    replicate_engine
+from ..core.mutable_index import MutableIndex
 from ..core.pipeline import StreamingScheduler, bucket_ladder
+from ..core.topology import ServingTopology
 from ..data.synthetic import clustered_vectors
 from ..models.model import build_model
 
@@ -167,7 +178,7 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
         rag: bool = False, seed: int = 0, verbose: bool = True,
         query_encoder: QueryEncoder | str | None = None, fleet: int = 1,
         sharded: bool = False, replicas: int = 1, exec: str = "inproc",
-        tenants: str | list | None = None):
+        tenants: str | list | None = None, churn: float = 0.0):
     # flag-consistency first: these used to be SILENTLY ignored, burning a
     # debugging session on a "sharded" run that never sharded anything
     if sharded and fleet < 2:
@@ -189,6 +200,16 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
         raise ValueError(
             "--exec mesh drives one device per shard; replication on the "
             "mesh is a multi-process launch, not --replicas")
+    if not 0.0 <= churn < 1.0:
+        raise ValueError(f"--churn must be in [0, 1), got {churn}")
+    if churn > 0 and not rag:
+        raise ValueError("--churn mutates the retrieval corpus and "
+                         "needs --rag")
+    if churn > 0 and fleet > 1 and not sharded:
+        raise ValueError(
+            "--churn needs the typed mutable topology (--sharded) or a "
+            "single engine; the replicated FleetScheduler facade carries "
+            "no day-2 mutation path")
     specs = None
     if tenants is not None:
         specs = parse_tenants(tenants) if isinstance(tenants, str) \
@@ -217,12 +238,21 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
     params, _ = model.init(key)
 
     eng = None
+    mut = None
     if rag:
         x, _ = clustered_vectors(seed, 2000, 32, 8)
         icfg = compact_index.IndexConfig(dim=32, n_clusters=8, degree=8,
                                          knn_k=16)
         scfg = engine.SearchConfig(nprobe=2, ef=16, k=4)
-        eng = engine.PIMCQGEngine.build(key, x, icfg, scfg, n_shards=2)
+        if churn > 0:
+            # mutable corpus: pre-allocate enough append-slab headroom that
+            # one churn round fits even if every insert routes to one
+            # cluster (frozen-centroid assignment decides, not us)
+            n_churn = max(1, int(round(churn * len(x))))
+            mut = MutableIndex.build(key, x, icfg, slab=max(16, n_churn))
+            eng = mut.to_engine(scfg, n_shards=2)
+        else:
+            eng = engine.PIMCQGEngine.build(key, x, icfg, scfg, n_shards=2)
         modes = None
         if specs is not None:
             tenant_backends = sorted({t.backend for t in specs
@@ -238,11 +268,12 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
             # `replicas` engine replicas; queries scatter to the owners of
             # their probed clusters, partial top-k gathers on the origin,
             # and admission control applies tier-wide
-            scheduler = topology(
-                eng, shards=fleet, replicas=replicas, exec=exec,
-                modes=modes, tenants=specs,
+            scheduler = TopologyConfig(
+                shards=fleet, replicas=replicas, exec=exec,
+                modes=modes, tenants=specs, mutable=churn > 0,
                 buckets=bucket_ladder(max(requests, 1)),
-                fill_threshold=max(requests // 2, 1), wait_limit_s=5e-3)
+                fill_threshold=max(requests // 2, 1),
+                wait_limit_s=5e-3).build(eng)
         elif fleet > 1:
             # multi-engine tier: shard the decode-step query stream across
             # `fleet` replicas behind admission control (core/fleet.py)
@@ -258,6 +289,26 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
             query_encoder = "mean-pool"
         if isinstance(query_encoder, str):
             query_encoder = ENCODERS[query_encoder](params, icfg.dim)
+        if churn > 0:
+            # one day-2 churn round before retrieval: delete + insert a
+            # --churn fraction of the corpus, compact the dirty clusters,
+            # and swap the rebuilt state into the live serving tier
+            # (zero retraces: shapes are stable by construction)
+            n_churn = max(1, int(round(churn * mut.n_live)))
+            mut.delete(mut.live_ids()[:n_churn])
+            rng = np.random.default_rng(seed + 1)
+            mut.insert(np.arange(len(x), len(x) + n_churn),
+                       rng.standard_normal((n_churn, icfg.dim))
+                       .astype(np.float32))
+            compacted = mut.compact()
+            if isinstance(scheduler, ServingTopology):
+                scheduler.apply(mut)
+            else:
+                eng.refresh(*mut.snapshot())
+            if verbose:
+                print(f"[serve] rag: churned {n_churn} deletes + "
+                      f"{n_churn} inserts ({churn:.1%}), compacted "
+                      f"{len(compacted)} clusters, swapped live")
 
     B = requests
     tokens = jax.random.randint(key, (B, prompt_len), 0, cfg.vocab_size)
@@ -366,6 +417,12 @@ def main():
                          "weighted-fair (DWRR) by the admission tier; a "
                          "backend entry pins the tenant to matching shards "
                          "(needs --sharded)")
+    ap.add_argument("--churn", type=float, default=0.0,
+                    help="with --rag: delete+insert this fraction of the "
+                         "retrieval corpus through the streaming mutation "
+                         "tier (MutableIndex), compact, and swap the result "
+                         "into the live scheduler before retrieval "
+                         "(day-2 ops path; needs --sharded when --fleet>1)")
     args = ap.parse_args()
     # surface flag misuse as an argparse error (exit 2 + usage), not a
     # silently different topology
@@ -394,9 +451,18 @@ def main():
         if any(t.backend is not None for t in specs) and not args.sharded:
             ap.error("tenant backends pin tenants to shard modes and need "
                      "--sharded")
+    if not 0.0 <= args.churn < 1.0:
+        ap.error(f"--churn must be in [0, 1), got {args.churn}")
+    if args.churn > 0 and not args.rag:
+        ap.error("--churn mutates the retrieval corpus and needs --rag")
+    if args.churn > 0 and args.fleet > 1 and not args.sharded:
+        ap.error("--churn with --fleet > 1 needs --sharded (the typed "
+                 "mutable topology; the replicated facade has no day-2 "
+                 "mutation path)")
     run(args.arch, args.requests, args.prompt_len, args.gen, args.rag,
         query_encoder=args.encoder, fleet=args.fleet, sharded=args.sharded,
-        replicas=args.replicas, exec=args.exec, tenants=args.tenants)
+        replicas=args.replicas, exec=args.exec, tenants=args.tenants,
+        churn=args.churn)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,421 @@
+"""Day-2 streaming mutation (ROADMAP item 1 tentpole) + typed config API.
+
+Pins the contracts the churn bench leans on:
+
+  * PARITY — after ``compact()``, a mutated ``MutableIndex`` snapshot is
+    BITWISE identical to a from-scratch ``rebuild()`` of the same live
+    set (every CompactIndex field), property-style over random
+    delete/insert batches (hypothesis when installed, a seeded grid
+    otherwise — the tier-1 hypothesis-optional pattern); and serving the
+    mutated state through a topology at shards {1, 2} returns ids
+    bit-identical to a single engine over the rebuild.
+
+  * SHAPE STABILITY — ``engine.refresh(*mut.snapshot())`` never
+    recompiles: the slab/capacity pre-allocation keeps every snapshot's
+    shapes constant.
+
+  * ALL-OR-NOTHING MUTATION — invalid batches (slab overflow, duplicate
+    ids, dead/unknown ids) raise without partial effects.
+
+  * HONEST ACCOUNTING — tombstones bill as reclaimable in
+    ``footprint_report`` and flow to ``Placement.mem_reclaimable`` via
+    ``partition_index(mutable=True)``; compaction reclaims to zero.
+
+  * TYPED API — ``TopologyConfig`` front-loads validation; the legacy
+    ``topology(**kw)`` form still works but emits a DeprecationWarning;
+    the typed form never warns.
+"""
+
+import warnings
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import compact_index, engine, placement
+from repro.core.mutable_index import MutableIndex
+from repro.core.topology import TopologyConfig, partition_index, topology
+from repro.data.synthetic import clustered_vectors, query_set
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+SLAB = 24
+_FIELDS = ["codes", "f_add", "neighbors", "entry", "n_valid", "node_ids",
+           "centroids", "alpha", "rho", "shift1", "shift2",
+           "residual_norm", "cos_theta"]
+
+
+@pytest.fixture(scope="module")
+def base():
+    x, _ = clustered_vectors(3, 1200, 32, 6)
+    q = query_set(3, x, 16)
+    icfg = compact_index.IndexConfig(dim=32, n_clusters=6, degree=8,
+                                     knn_k=16)
+    idx, host = compact_index.build_compact_index(
+        jax.random.PRNGKey(0), x, icfg)
+    return idx, host, icfg, x, q
+
+
+def _mut(base, slab=SLAB):
+    idx, host, icfg, _, _ = base
+    return MutableIndex(idx, host, icfg, slab=slab)
+
+
+def _scfg():
+    return engine.SearchConfig(nprobe=2, ef=16, k=5)
+
+
+def _assert_index_equal(a, b):
+    for f in _FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"CompactIndex.{f} diverges from the rebuild")
+
+
+def _update_churn(mut, rng, n_del, n_ins, next_gid):
+    """The bench's mutation shape: tombstone n_del rows, insert n_ins
+    perturbed copies of surviving rows under fresh gids (re-embedded
+    documents — routes across clusters like the corpus)."""
+    drop = rng.choice(mut.live_ids(), size=n_del, replace=False)
+    mut.delete(drop)
+    src = rng.choice(mut.live_ids(), size=n_ins)
+    vecs = mut.vectors[src] + 0.05 * rng.standard_normal(
+        (n_ins, mut.dim)).astype(np.float32)
+    gids = np.arange(next_gid, next_gid + n_ins)
+    mut.insert(gids, vecs)
+    return drop, gids
+
+
+def _single_engine_ids(mut_or_pair, icfg, q):
+    """Reference search ids: one engine over (idx, host)."""
+    idx, host = mut_or_pair
+    sizes = np.asarray(idx.n_valid).astype(np.float64)
+    bpn = compact_index.compact_bytes_per_node(icfg.dim, icfg.degree)
+    pl = placement.greedy_place(sizes, sizes * bpn, 1)
+    ref = engine.PIMCQGEngine(idx, host, pl, icfg, _scfg())
+    return np.asarray(ref.search(q)[0].ids)
+
+
+# ---------------------------------------------------------------------------
+# the bit-parity tentpole: mutate -> compact == rebuild
+# ---------------------------------------------------------------------------
+
+def test_unmutated_snapshot_matches_rebuild(base):
+    """Construction canonicalizes every cluster through the compact()
+    path, so an untouched snapshot is already bitwise a rebuild."""
+    mut = _mut(base)
+    idx, host = mut.snapshot()
+    ridx, rhost = mut.rebuild()
+    _assert_index_equal(idx, ridx)
+    np.testing.assert_array_equal(np.asarray(host.vectors),
+                                  np.asarray(rhost.vectors))
+
+
+def _check_mutate_compact_equals_rebuild(base, seed):
+    idx, host, icfg, x, _ = base
+    mut = _mut(base)
+    rng = np.random.default_rng(seed)
+    next_gid = len(x)
+    for _ in range(int(rng.integers(1, 3))):       # 1-2 churn rounds
+        n_del = int(rng.integers(4, 24))
+        n_ins = int(rng.integers(1, 16))
+        _update_churn(mut, rng, n_del, n_ins, next_gid)
+        next_gid += n_ins
+    assert mut.dirty, "churn must mark clusters dirty"
+    compacted = mut.compact()
+    assert compacted and not mut.dirty
+    sidx, shost = mut.snapshot()
+    ridx, rhost = mut.rebuild()
+    _assert_index_equal(sidx, ridx)
+    np.testing.assert_array_equal(np.asarray(shost.vectors),
+                                  np.asarray(rhost.vectors))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1))
+    def test_mutate_compact_equals_rebuild(base, seed):
+        _check_mutate_compact_equals_rebuild(base, seed)
+else:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+    def test_mutate_compact_equals_rebuild(base, seed):
+        _check_mutate_compact_equals_rebuild(base, seed)
+
+
+def test_partial_compact_targets_only_requested(base):
+    mut = _mut(base)
+    rng = np.random.default_rng(7)
+    _update_churn(mut, rng, 12, 8, len(base[3]))
+    dirty = sorted(mut.dirty)
+    assert len(dirty) >= 2
+    first = mut.compact(clusters=[dirty[0]])
+    assert first == [dirty[0]]
+    assert sorted(mut.dirty) == dirty[1:]
+    mut.compact()                              # finish the rest
+    _assert_index_equal(mut.snapshot()[0], mut.rebuild()[0])
+
+
+def test_delete_reinsert_roundtrip_restores_original(base):
+    """Full circle: tombstone a row, compact, re-insert the SAME vector
+    under the same gid, compact — bitwise back to the initial state
+    (frozen-centroid routing sends it home, canonical order re-sorts)."""
+    mut = _mut(base)
+    idx0, host0 = mut.snapshot()
+    g = int(mut.live_ids()[17])
+    v = mut.vectors[g].copy()
+    mut.delete([g])
+    assert g not in mut.live_ids()
+    mut.compact()
+    mut.insert([g], v[None])
+    mut.compact()
+    idx1, host1 = mut.snapshot()
+    _assert_index_equal(idx1, idx0)
+    np.testing.assert_array_equal(np.asarray(host1.vectors),
+                                  np.asarray(host0.vectors))
+
+
+# ---------------------------------------------------------------------------
+# serving parity: mutated index through a topology == rebuilt single engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shards", [1, 2])
+def test_compacted_serving_parity(base, shards):
+    idx, host, icfg, x, q = base
+    mut = _mut(base)
+    rng = np.random.default_rng(3)
+    _update_churn(mut, rng, 16, 10, len(x))
+    mut.compact()
+    topo = TopologyConfig(shards=shards, mutable=True, buckets=(8, 16),
+                          fill_threshold=16, wait_limit_s=1e-3,
+                          fifo_depth=2).build(mut.to_engine(_scfg()))
+    rep = topo.run(q)
+    assert rep.n_shed == 0 and rep.n_unrouted == 0
+    ref_ids = _single_engine_ids(mut.rebuild(), icfg, q)
+    np.testing.assert_array_equal(rep.ids, ref_ids)
+
+
+def test_apply_swaps_mutated_state_live(base):
+    """apply() on a running (pre-built, warmed) topology serves the new
+    snapshot: results match a single engine over the same snapshot, and
+    tombstoned ids can never be returned."""
+    idx, host, icfg, x, q = base
+    mut = _mut(base)
+    topo = TopologyConfig(shards=2, mutable=True, buckets=(8, 16),
+                          fill_threshold=16, wait_limit_s=1e-3,
+                          fifo_depth=2).build(mut.to_engine(_scfg()))
+    before = topo.run(q)
+    # tombstone ids that are PROVABLY being served right now
+    served = np.unique(np.asarray(before.ids))
+    drop = served[served >= 0][:12]
+    assert len(drop) >= 1
+    mut.delete(drop)
+    rng = np.random.default_rng(5)
+    src = rng.choice(mut.live_ids(), size=6)
+    mut.insert(np.arange(len(x), len(x) + 6),
+               mut.vectors[src] + 0.05 * rng.standard_normal(
+                   (6, mut.dim)).astype(np.float32))
+    topo.apply(mut)
+    after = topo.run(q)
+    assert not np.isin(np.asarray(after.ids), drop).any(), \
+        "tombstoned ids surfaced in results after apply()"
+    np.testing.assert_array_equal(
+        after.ids, _single_engine_ids(mut.snapshot(), icfg, q))
+
+
+def test_apply_requires_mutable(base):
+    mut = _mut(base)
+    topo = TopologyConfig(shards=2, buckets=(8, 16), fill_threshold=16,
+                          wait_limit_s=1e-3).build(mut.to_engine(_scfg()))
+    with pytest.raises(ValueError, match="mutable"):
+        topo.apply(mut)
+
+
+def test_refresh_keeps_compile_cache(base):
+    """Snapshot shapes are stable, so refresh + re-search compiles
+    nothing new — the zero-recompile swap contract."""
+    idx, host, icfg, x, q = base
+    mut = _mut(base)
+    eng = mut.to_engine(_scfg())
+    np.asarray(eng.search(q)[0].ids)               # warm
+    cc = eng.compile_count
+    rng = np.random.default_rng(11)
+    _update_churn(mut, rng, 10, 6, len(x))
+    eng.refresh(*mut.snapshot())
+    np.asarray(eng.search(q)[0].ids)
+    mut.compact()
+    eng.refresh(*mut.snapshot())
+    np.asarray(eng.search(q)[0].ids)
+    assert eng.compile_count == cc
+
+
+# ---------------------------------------------------------------------------
+# all-or-nothing mutation validation
+# ---------------------------------------------------------------------------
+
+def test_delete_validates_batch_atomically(base):
+    mut = _mut(base)
+    live0, v0 = mut.n_live, mut.version
+    good = int(mut.live_ids()[0])
+    with pytest.raises(ValueError, match="duplicate"):
+        mut.delete([good, good])
+    with pytest.raises(ValueError, match="not live"):
+        mut.delete([good, 10**6])
+    assert mut.n_live == live0 and mut.version == v0
+    assert good in mut.live_ids()                  # the good id survived
+
+
+def test_insert_validates_batch_atomically(base):
+    idx, host, icfg, x, _ = base
+    mut = _mut(base)
+    live0, v0 = mut.n_live, mut.version
+    vec = mut.vectors[int(mut.live_ids()[0])][None]
+    gid = len(x)
+    with pytest.raises(ValueError, match="duplicate"):
+        mut.insert([gid, gid], np.repeat(vec, 2, axis=0))
+    with pytest.raises(ValueError, match="already live"):
+        mut.insert([int(mut.live_ids()[3])], vec)
+    with pytest.raises(ValueError, match="capacity"):
+        mut.insert([mut.capacity], vec)
+    with pytest.raises(ValueError, match="ids for"):
+        mut.insert([gid], np.repeat(vec, 2, axis=0))
+    with pytest.raises(ValueError, match="dim"):
+        mut.insert([gid], vec[:, :8])
+    assert mut.n_live == live0 and mut.version == v0
+
+
+def test_slab_overflow_raises_without_partial_writes(base):
+    idx, host, icfg, x, _ = base
+    mut = _mut(base, slab=4)
+    # aim the whole batch at the FULLEST cluster (its free slots == slab):
+    # exact copies of one of its live vectors route to its own centroid
+    c_full = int(np.argmax(mut.n_valid))
+    v = mut.vectors[int(mut.node_ids[c_full, 0])]
+    n = 5                                          # slab is 4
+    vecs = np.repeat(v[None], n, axis=0)
+    live0, v0 = mut.n_live, mut.version
+    with pytest.raises(ValueError, match="append slab full"):
+        mut.insert(np.arange(len(x), len(x) + n), vecs)
+    assert mut.n_live == live0 and mut.version == v0
+    # after compacting nothing is reclaimed (no tombstones), still full
+    mut.insert(np.arange(len(x), len(x) + 4), vecs[:4])
+    with pytest.raises(ValueError, match="compact"):
+        mut.insert([len(x) + 4], vecs[:1])
+
+
+def test_tombstoned_gid_reusable_only_after_compact(base):
+    mut = _mut(base)
+    g = int(mut.live_ids()[2])
+    v = mut.vectors[g][None].copy()
+    mut.delete([g])
+    with pytest.raises(ValueError, match="tombstoned"):
+        mut.insert([g], v)
+    mut.compact()
+    mut.insert([g], v)
+    assert g in mut.live_ids()
+
+
+# ---------------------------------------------------------------------------
+# churn-honest memory accounting
+# ---------------------------------------------------------------------------
+
+def test_footprint_report_churn_split():
+    per = compact_index.compact_bytes_per_node(32, 8)
+    rep = compact_index.footprint_report(32, 8, 100, tombstoned=7, slab=5)
+    assert rep["pimcqg_bytes"] == rep["live_bytes"] == 100 * per
+    assert rep["reclaimable_bytes"] == 7 * per
+    assert rep["reserved_bytes"] == 5 * per
+    assert rep["resident_bytes"] == (100 + 7 + 5) * per
+    # the Table II comparison is unchanged by the day-2 extension
+    legacy = compact_index.footprint_report(32, 8, 100)
+    assert legacy["reduction"] == rep["reduction"]
+    assert legacy["reclaimable_bytes"] == 0 == legacy["reserved_bytes"]
+
+
+def test_mutable_footprint_tracks_tombstones(base):
+    mut = _mut(base)
+    per = compact_index.compact_bytes_per_node(32, 8)
+    assert mut.footprint()["reclaimable_bytes"] == 0
+    drop = mut.live_ids()[:9]
+    mut.delete(drop)
+    fp = mut.footprint()
+    assert fp["reclaimable_bytes"] == 9 * per
+    assert fp["live_bytes"] == mut.n_live * per
+    mut.compact()
+    assert mut.footprint()["reclaimable_bytes"] == 0
+
+
+def test_partition_index_mutable_billing(base):
+    """mutable=True bills the FULL padded budget per cluster (slab
+    headroom is spoken for) and surfaces tombstoned bytes as
+    Placement.mem_reclaimable; the frozen path reports zero."""
+    idx, host, icfg, x, _ = base
+    mut = _mut(base)
+    mut.delete(mut.live_ids()[:9])
+    eng = mut.to_engine(_scfg())
+    per = compact_index.compact_bytes_per_node(icfg.dim, icfg.degree)
+    _, pl = partition_index(eng, 2, mutable=True)
+    assert pl.mem_reclaimable.sum() == pytest.approx(9 * per)
+    # spoken-for billing: budget rows per cluster, not just occupied ones
+    assert pl.mem.sum() == pytest.approx(
+        eng.index.n_clusters * eng.index.budget * per)
+    _, pl0 = partition_index(eng, 2, mutable=False)
+    assert pl0.mem_reclaimable is None             # frozen path: no split
+    assert pl0.mem.sum() < pl.mem.sum()
+
+
+# ---------------------------------------------------------------------------
+# the typed config API + deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_topology_config_validates_up_front():
+    with pytest.raises(ValueError, match="replica"):
+        TopologyConfig(replicas=0)
+    with pytest.raises(ValueError, match="shard"):
+        TopologyConfig(shards=0)
+    with pytest.raises(ValueError, match="shards >= 2"):
+        TopologyConfig(modes=("mulfree",))
+    with pytest.raises(ValueError, match="route"):
+        TopologyConfig(route="fastest-wins")
+    with pytest.raises(ValueError, match="inner shard"):
+        TopologyConfig(inner_shards=0)
+    with pytest.raises(ValueError, match="AutoscalePolicy"):
+        TopologyConfig(autoscale="please")
+
+
+def test_topology_config_is_frozen():
+    import dataclasses
+    cfg = TopologyConfig(shards=2)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.shards = 4
+    assert dataclasses.replace(cfg, replicas=2).replicas == 2
+
+
+def test_legacy_kwargs_shim_warns_and_matches_typed(base):
+    idx, host, icfg, x, q = base
+    mut = _mut(base)
+    eng = mut.to_engine(_scfg())
+    with pytest.warns(DeprecationWarning, match="TopologyConfig"):
+        legacy = topology(eng, shards=2, buckets=(8, 16),
+                          fill_threshold=16, wait_limit_s=1e-3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        typed = topology(eng, config=TopologyConfig(
+            shards=2, buckets=(8, 16), fill_threshold=16,
+            wait_limit_s=1e-3))                    # typed form: no warning
+    np.testing.assert_array_equal(legacy.run(q).ids, typed.run(q).ids)
+
+
+def test_topology_rejects_mixed_and_bogus_forms(base):
+    mut = _mut(base)
+    eng = mut.to_engine(_scfg())
+    with pytest.raises(ValueError, match="not both"):
+        topology(eng, config=TopologyConfig(), shards=2)
+    with pytest.raises(ValueError, match="TopologyConfig"):
+        topology(eng, config={"shards": 2})
+    with pytest.raises(TypeError, match="unknown keyword"):
+        with pytest.warns(DeprecationWarning):
+            topology(eng, n_shards=2)
