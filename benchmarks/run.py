@@ -34,6 +34,12 @@ Modules:
                                1% churn under 10x surge with zero
                                unavailability, <= 0.01 recall drift,
                                zero recompiles across live swaps
+    placement       ROADMAP 2  heat-aware placement + hot-cluster
+                               replication under Zipf(1.0) traffic:
+                               >= 2x goodput vs byte-balanced at equal
+                               recall, >= 1.5x hottest-shard heat-share
+                               cut, zero-recompile drift rebalancing
+                               (real topology + simulator overlay)
 """
 
 from __future__ import annotations
@@ -59,6 +65,7 @@ MODULES = [
     ("fig19", "pim_arch"),
     ("roofline", "roofline_table"),
     ("churn", "churn"),
+    ("placement", "placement"),
 ]
 
 

@@ -38,7 +38,12 @@ import math
 
 import numpy as np
 
-__all__ = ["AutoscalePolicy", "Autoscaler", "ScaleAction"]
+from . import compact_index as compact_index_mod
+from . import placement as placement_mod
+
+__all__ = ["AutoscalePolicy", "Autoscaler", "ScaleAction",
+           "RebalancePolicy", "Rebalancer", "RebalanceAction",
+           "tenant_fair_heat"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,3 +225,187 @@ class Autoscaler:
     def __repr__(self) -> str:
         return (f"Autoscaler(groups={[len(g) for g in self.topo.groups]}, "
                 f"actions={len(self.actions)})")
+
+
+# ---------------------------------------------------------------------------
+# SHARD-axis action: heat-driven placement rebalancing (ROADMAP item 2)
+# ---------------------------------------------------------------------------
+
+def tenant_fair_heat(report) -> np.ndarray | None:
+    """Fold per-tenant ``cluster_hits`` into ONE placement heat vector
+    where each tenant contributes in proportion to its admission WEIGHT,
+    not its query volume — a noisy tenant's hotspot cannot silently starve
+    a light tenant's placement. Each tenant's heat is normalized to sum to
+    its weight share, then the combined vector is rescaled to the global
+    ``cluster_hits`` mass so downstream thresholds keep their units.
+    Returns None when the report carries no per-tenant heat (replicated
+    tiers, or reports predating the per-tenant counters)."""
+    hits = getattr(report, "cluster_hits", None)
+    tenants = getattr(report, "tenants", None) or {}
+    per = [(t.get("weight", 1.0), np.asarray(t["cluster_hits"], np.float64))
+           for t in tenants.values()
+           if t.get("cluster_hits") is not None
+           and np.asarray(t["cluster_hits"]).sum() > 0]
+    if not per:
+        return None if hits is None else np.asarray(hits, np.float64)
+    wsum = sum(w for w, _ in per)
+    fair = sum((w / wsum) * (h / h.sum()) for w, h in per)
+    total = float(np.asarray(hits).sum()) if hits is not None else 1.0
+    return fair * total
+
+
+@dataclasses.dataclass(frozen=True)
+class RebalancePolicy:
+    """Heat-skew trigger + migration cost model for the SHARD-axis
+    autoscaling action: when measured scatter heat concentrates on one
+    shard, re-place clusters through ``placement.rebalance`` (+ re-pick
+    the replicated hot set) and swap the result into the live topology
+    via ``ServingTopology.apply_placement`` — zero recompiles, because
+    swap-based rebalancing preserves every engine's cluster count.
+
+    ``skew_high`` triggers on the hottest shard's share of routed load
+    relative to the fair share 1/S (1.5 = "one shard carries 1.5x its
+    fair share"); ``patience`` consecutive skewed reports are required
+    (the same anti-flapping hysteresis the replica autoscaler uses).
+    ``move_penalty`` prices migration (see ``placement.rebalance``);
+    ``min_hits`` ignores reports too small to trust; ``tenant_fair``
+    combines per-tenant heat by tenant weight instead of raw volume."""
+
+    skew_high: float = 1.5
+    patience: int = 1
+    move_penalty: float = 0.02
+    max_moves: int | None = None
+    min_hits: int = 1
+    tenant_fair: bool = True
+
+    def __post_init__(self):
+        if not self.skew_high > 1.0:
+            raise ValueError(f"skew_high must be > 1 (1 = perfectly "
+                             f"balanced), got {self.skew_high}")
+        if self.patience < 1:
+            raise ValueError(f"patience must be >= 1, got {self.patience}")
+        if not self.move_penalty >= 0:
+            raise ValueError(f"move_penalty must be >= 0, "
+                             f"got {self.move_penalty}")
+        if self.max_moves is not None and self.max_moves < 2:
+            raise ValueError(f"max_moves must be >= 2 (one swap) or None, "
+                             f"got {self.max_moves}")
+        if self.min_hits < 0:
+            raise ValueError(f"min_hits must be >= 0, got {self.min_hits}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RebalanceAction:
+    """One applied rebalance, kept in ``Rebalancer.actions``."""
+    skew_before: float       # hottest-shard load share x n_shards
+    n_moved: int             # primary clusters whose shard changed
+    replicated: int          # clusters carrying replica owners after
+    reason: str
+
+
+class Rebalancer:
+    """Consumes ``TopologyReport``s, re-places clusters on the live
+    ``ServingTopology`` — the SHARD-axis sibling of ``Autoscaler``
+    (which only grows replicas and cannot split a hot shard's data).
+
+    Call ``step(report)`` between streams; it returns the applied
+    ``RebalanceAction`` or None. The new placement is bootstrapped from
+    the current one (``placement.rebalance``: migration-minimizing swaps)
+    and, when the topology replicates hot clusters, the replicated set is
+    re-picked from the fresh heat with the SAME per-shard replica
+    capacity — so ``apply_placement`` re-slices into identical shapes and
+    ``topo.warm()`` stays 0 after every rebalance."""
+
+    def __init__(self, topo, policy: RebalancePolicy | None = None):
+        if policy is None:
+            policy = RebalancePolicy()
+        if not isinstance(policy, RebalancePolicy):
+            raise TypeError(f"policy must be a RebalancePolicy, "
+                            f"got {type(policy).__name__}")
+        self.topo = topo
+        self.policy = policy
+        self._skewed = 0
+        self.actions: list[RebalanceAction] = []
+
+    def observe(self, report) -> dict:
+        """Skew signal from one report: the hottest shard's share of
+        routed queries (``shard_probes`` — actual per-shard load, which
+        under replication differs from primary-ownership heat) over the
+        fair share 1/S."""
+        s_n = len(self.topo.groups)
+        probes = getattr(report, "shard_probes", None)
+        if probes is None or np.asarray(probes).sum() <= 0:
+            hits = getattr(report, "cluster_hits", None)
+            if hits is None:
+                return {"skew": 0.0, "total": 0.0}
+            probes = np.zeros(s_n, np.float64)
+            np.add.at(probes, np.asarray(self.topo.part_of),
+                      np.asarray(hits, np.float64))
+        probes = np.asarray(probes, np.float64)
+        total = probes.sum()
+        skew = float(probes.max() / total * s_n) if total > 0 else 0.0
+        return {"skew": skew, "total": total,
+                "shares": probes / total if total > 0 else probes}
+
+    def _heat(self, report) -> np.ndarray:
+        heat = tenant_fair_heat(report) if self.policy.tenant_fair else None
+        if heat is None:
+            heat = np.asarray(report.cluster_hits, np.float64)
+        return heat
+
+    def _bytes_per_cluster(self, idx) -> np.ndarray:
+        eng0 = self.topo.groups[0][0]
+        bpn = compact_index_mod.compact_bytes_per_node(
+            eng0.icfg.dim, eng0.icfg.degree)
+        if getattr(self.topo, "mutable", False):
+            return np.full(idx.n_clusters, float(idx.budget) * bpn)
+        return np.asarray(idx.n_valid, np.float64) * bpn
+
+    def step(self, report) -> RebalanceAction | None:
+        """Update the skew streak from one report; rebalance when due."""
+        pol = self.policy
+        sig = self.observe(report)
+        hits = getattr(report, "cluster_hits", None)
+        if hits is None or sig["total"] < pol.min_hits:
+            return None
+        if sig["skew"] >= pol.skew_high:
+            self._skewed += 1
+        else:
+            self._skewed = 0
+            return None
+        if self._skewed < pol.patience:
+            return None
+        self._skewed = 0
+
+        topo = self.topo
+        old = topo.placement
+        heat = self._heat(report)
+        idx = topo._src_index
+        bpc = self._bytes_per_cluster(idx)
+        new = placement_mod.rebalance(
+            old, heat, bpc, mem_budget=getattr(topo, "mem_budget", None),
+            move_penalty=pol.move_penalty, max_moves=pol.max_moves)
+        if old.replicated:
+            # re-pick the hot set from fresh heat, SAME capacity/copies —
+            # identical resident counts, so the swap stays shape-stable
+            copies = old.owners_of.shape[1] - 1
+            top_h = int((old.owners_of[:, 1] >= 0).sum())
+            cap = old.resident_table.shape[1] - old.per_shard
+            new = placement_mod.replicate_hot(
+                new, heat, bpc, top_h=top_h, copies=copies,
+                mem_budget=getattr(topo, "mem_budget", None), cap=cap)
+        n_moved = int((new.shard_of != old.shard_of).sum())
+        if n_moved == 0 and not old.replicated:
+            return None                   # nothing worth moving
+        topo.apply_placement(new)
+        act = RebalanceAction(
+            skew_before=sig["skew"], n_moved=n_moved,
+            replicated=int((new.owners_of[:, 1] >= 0).sum())
+            if new.replicated else 0,
+            reason=(f"skew={sig['skew']:.2f}>={pol.skew_high} over "
+                    f"{pol.patience} report(s), {n_moved} primaries moved"))
+        self.actions.append(act)
+        return act
+
+    def __repr__(self) -> str:
+        return f"Rebalancer(actions={len(self.actions)})"

@@ -47,6 +47,7 @@ import dataclasses
 
 import numpy as np
 
+from .autoscale import RebalancePolicy
 from .pipeline import StageCosts
 from .topology import (AdmissionController, ReplicaGroup, ServingTopology,
                        ShardGroup, ShardWorker, ShardedSink, TenantSpec,
@@ -55,7 +56,7 @@ from .topology import (AdmissionController, ReplicaGroup, ServingTopology,
 
 __all__ = ["FleetScheduler", "FleetReport", "replicate_engine",
            "ShardedFleet", "ShardedReport", "partition_engine", "topology",
-           "TenantSpec", "TopologyConfig"]
+           "TenantSpec", "TopologyConfig", "RebalancePolicy"]
 
 ROUTE_POLICIES = ("round-robin", "least-in-flight")
 
@@ -149,12 +150,14 @@ class FleetScheduler:
 def partition_engine(eng, n_parts: int, *, mem_budget: int | None = None,
                      strict: bool = False, modes=None, inner_shards: int = 1,
                      freq: np.ndarray | None = None,
+                     heat: np.ndarray | None = None,
                      **stream_kw) -> "ShardedFleet":
     """Partition one built engine's clusters across ``n_parts`` engines and
     wrap them in a ``ShardedFleet`` (see ``core.topology.partition_index``
     for the slicing semantics — disjoint cluster slices via
     ``placement.greedy_place``, ~1/N memory per engine, optional strict
-    ``mem_budget`` and per-partition ``modes``).
+    ``mem_budget`` and per-partition ``modes``; ``heat`` threads measured
+    ``cluster_hits`` into the placer in place of the size prior).
 
     Extra keyword args flow to the ShardedFleet stream parameters
     (buckets, fill_threshold, wait_limit_s, fifo_depth, ...) including
@@ -165,7 +168,8 @@ def partition_engine(eng, n_parts: int, *, mem_budget: int | None = None,
     instead."""
     engines, pl = partition_index(eng, n_parts, mem_budget=mem_budget,
                                   strict=strict, modes=modes,
-                                  inner_shards=inner_shards, freq=freq)
+                                  inner_shards=inner_shards, freq=freq,
+                                  heat=heat)
     return ShardedFleet(engines, part_of=pl.shard_of,
                         local_cid=pl.local_slot,
                         centroids=eng.index.centroids, **stream_kw)

@@ -18,7 +18,8 @@ import numpy as np
 
 __all__ = ["KMeansResult", "kmeans", "assign", "cluster_filter",
            "adaptive_keep_mask", "bincount_sizes", "split_probes_by_owner",
-           "owner_split_op"]
+           "owner_split_op", "choose_owners", "owner_tables",
+           "owner_tables_op"]
 
 
 class KMeansResult(NamedTuple):
@@ -181,15 +182,127 @@ def split_probes_by_owner(probe_cids: np.ndarray, owner_of: np.ndarray,
     heterogeneous routing). ``-1`` entries in ``probe_cids`` are holes
     (already-masked probes) and are preserved as holes in every owner's
     table — never resolved through the owner map.
+
+    ``owner_of``/``local_cid`` may also be the MULTI-owner (C, R) maps of a
+    hot-cluster-replicated placement (``Placement.owners_of``/
+    ``locals_of``): the split then routes each probe to exactly ONE owning
+    shard via :func:`choose_owners` (least-loaded, fanout-collapsing) —
+    per-query probe sets stay disjoint, so the origin ``merge_topk`` path
+    is untouched. With single-column maps (no cluster replicated) the
+    result is bit-identical to the 1-D path.
     """
+    owner_of = np.asarray(owner_of)
+    if owner_of.ndim == 2:
+        own, local, _ = choose_owners(probe_cids, owner_of,
+                                      np.asarray(local_cid),
+                                      n_owners=n_owners, live=live)
+        return owner_tables(own, local, n_owners)
     probe_cids = np.asarray(probe_cids)
     hole = probe_cids < 0
     safe = np.where(hole, 0, probe_cids)                   # avoid -1 wrap
-    own = np.where(hole, -1, np.asarray(owner_of)[safe])   # (Q, P)
+    own = np.where(hole, -1, owner_of[safe])               # (Q, P)
     if live is not None:
         own = np.where(live, own, -1)
     local = np.where(own >= 0, np.asarray(local_cid)[safe], -1)
     tables = np.stack([np.where(own == o, local, -1).astype(np.int32)
                        for o in range(n_owners)])
+    touches = (tables >= 0).any(axis=2).T                  # (Q, O)
+    return tables, touches
+
+
+def choose_owners(probe_cids: np.ndarray, owners_of: np.ndarray,
+                  locals_of: np.ndarray, *, n_owners: int,
+                  live: np.ndarray | None = None,
+                  load: np.ndarray | None = None
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pick ONE owning shard per probe over a multi-owner (replicated)
+    cluster map — the origin-scatter half of hot-cluster replication.
+
+    ``owners_of``/``locals_of`` are (C, R): column 0 the primary owner,
+    later columns replica owners (-1 = fewer owners). Deterministic greedy,
+    query-major, two goals in order:
+
+      1. collapse fanout — each query repeatedly routes the largest group
+         of its still-unassigned probes that some single owner can serve
+         (a fully-replicated hot probe set lands on ONE shard instead of
+         scattering);
+      2. balance load — ties pick the owner with the fewest routed
+         queries so far (then the lowest shard id), and the counter
+         updates as it assigns, spreading successive hot queries across
+         the replica owners.
+
+    A probe whose cluster has a single owner always routes to it, so with
+    no replicated clusters the choice is bit-identical to
+    ``owner_of[cid]`` routing. ``live`` (Q, P) masks probes out; ``load``
+    (O,) optionally seeds the per-owner routed-query counters (updated in
+    place if given). Returns (own (Q, P), local (Q, P), load (O,)); holes
+    and masked probes are -1 in both outputs."""
+    probe_cids = np.asarray(probe_cids)
+    owners_of = np.asarray(owners_of)
+    locals_of = np.asarray(locals_of)
+    q_n, p_n = probe_cids.shape
+    r_n = owners_of.shape[1]
+    if load is None:
+        load = np.zeros(n_owners, np.int64)
+    hole = probe_cids < 0
+    if live is not None:
+        hole = hole | ~np.asarray(live, bool)
+    safe = np.where(probe_cids < 0, 0, probe_cids)
+    opts = np.where(hole[:, :, None], -1, owners_of[safe])   # (Q, P, R)
+    locs = np.where(hole[:, :, None], -1, locals_of[safe])
+    own = np.full((q_n, p_n), -1, np.int32)
+    local = np.full((q_n, p_n), -1, np.int32)
+    for i in range(q_n):
+        todo = [j for j in range(p_n) if not hole[i, j]]
+        while todo:
+            # coverage: how many unassigned probes each owner could serve
+            cover = np.zeros(n_owners, np.int64)
+            for j in todo:
+                for r in range(r_n):
+                    o = opts[i, j, r]
+                    if o >= 0:
+                        cover[o] += 1
+            best = max(range(n_owners),
+                       key=lambda o: (cover[o], -load[o], -o))
+            if cover[best] == 0:
+                break                                      # defensive
+            took = False
+            rest = []
+            for j in todo:
+                r = next((r for r in range(r_n)
+                          if opts[i, j, r] == best), None)
+                if r is None:
+                    rest.append(j)
+                    continue
+                own[i, j] = best
+                local[i, j] = locs[i, j, r]
+                took = True
+            if took:
+                load[best] += 1        # one more query routed to ``best``
+            todo = rest
+    return own, local, load
+
+
+def owner_tables(own: np.ndarray, local: np.ndarray, n_owners: int
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-owner probe tables from explicit per-probe (owner, local id)
+    choices — the table-building tail of :func:`split_probes_by_owner`
+    once :func:`choose_owners` has resolved multi-owner probes. Returns
+    (tables (O, Q, P) int32, touches (Q, O) bool)."""
+    tables = np.stack([np.where(own == o, local, -1).astype(np.int32)
+                       for o in range(n_owners)])
+    touches = (tables >= 0).any(axis=2).T                  # (Q, O)
+    return tables, touches
+
+
+@functools.partial(jax.jit, static_argnames=("n_owners",))
+def owner_tables_op(own: jax.Array, local: jax.Array, *, n_owners: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Lowerable twin of :func:`owner_tables` — same broadcast-compare
+    shape as :func:`owner_split_op`, but over PRE-CHOSEN owners (the
+    replicated-routing path, where the sequential least-loaded choice runs
+    on host and only the table build lowers)."""
+    owners = jnp.arange(n_owners, dtype=own.dtype)[:, None, None]
+    tables = jnp.where(own[None] == owners, local[None], -1).astype(jnp.int32)
     touches = (tables >= 0).any(axis=2).T                  # (Q, O)
     return tables, touches

@@ -108,9 +108,27 @@ def replicate_engine(eng, n: int, *, share_executables: bool = True) -> list:
     return out
 
 
+def _slice_index(idx, members):
+    """Row-slice a CompactIndex down to the ``members`` cluster list (the
+    per-shard re-slicing step partition_index / apply / apply_placement
+    share — replica copies appear simply as repeated rows)."""
+    return compact_index_mod.CompactIndex(
+        codes=idx.codes[members], f_add=idx.f_add[members],
+        neighbors=idx.neighbors[members], entry=idx.entry[members],
+        n_valid=idx.n_valid[members], node_ids=idx.node_ids[members],
+        centroids=idx.centroids[members], alpha=idx.alpha[members],
+        rho=idx.rho[members], shift1=idx.shift1[members],
+        shift2=idx.shift2[members],
+        residual_norm=idx.residual_norm[members],
+        cos_theta=idx.cos_theta[members],
+        rotation=idx.rotation, dim=idx.dim)
+
+
 def partition_index(eng, n_parts: int, *, mem_budget: int | None = None,
                     strict: bool = False, modes=None, inner_shards: int = 1,
-                    freq: np.ndarray | None = None, mutable: bool = False
+                    freq: np.ndarray | None = None, mutable: bool = False,
+                    heat: np.ndarray | None = None, replicate_hot: int = 0,
+                    replica_factor: int = 2, placement=None
                     ) -> tuple[list, placement_mod.Placement]:
     """Slice one built engine's clusters into ``n_parts`` disjoint engines.
 
@@ -131,14 +149,42 @@ def partition_index(eng, n_parts: int, *, mem_budget: int | None = None,
     resident on the PU) and reports the tombstoned bytes as
     ``placement.mem_reclaimable``.
 
+    ``heat`` threads MEASURED per-cluster scatter heat (a report's
+    ``cluster_hits``) into the placer's ``freq`` argument — heat-aware
+    placement from live data rather than the size prior (mutually
+    exclusive with ``freq``, which keeps its estimated/offline meaning).
+    ``replicate_hot=H`` additionally gives the H hottest clusters copies
+    on ``replica_factor - 1`` extra shards (``placement.replicate_hot``):
+    each engine then holds its primary slice PLUS the replica copies, and
+    the scatter router picks one owner per probe. ``placement`` bypasses
+    the placer entirely with a prebuilt (possibly rebalanced/replicated)
+    ``Placement`` — the re-slicing path ``apply_placement`` shares.
+
     Returns (engines, placement); ``placement.shard_of``/``local_slot``
     are the owner map and per-owner local cluster ids the scatter router
-    consumes."""
+    consumes (``owners_of``/``locals_of`` the multi-owner forms)."""
     if n_parts < 1:
         raise ValueError(f"need at least one partition, got {n_parts}")
     if modes is not None and len(modes) != n_parts:
         raise ValueError(f"modes has {len(modes)} entries for {n_parts} "
                          f"partitions")
+    if heat is not None and freq is not None:
+        raise ValueError("pass EITHER heat= (measured cluster_hits) OR "
+                         "freq= (estimated frequency), not both")
+    if replicate_hot < 0:
+        raise ValueError(f"replicate_hot must be >= 0, got {replicate_hot}")
+    if replicate_hot:
+        if n_parts < 2:
+            raise ValueError("replicate_hot needs n_parts >= 2 (a copy "
+                             "must land on a DIFFERENT shard)")
+        if not 2 <= replica_factor <= n_parts:
+            raise ValueError(f"replica_factor must be in 2..{n_parts} "
+                             f"(owners per hot cluster), "
+                             f"got {replica_factor}")
+        if inner_shards != 1:
+            raise ValueError("replicate_hot with inner_shards > 1 is not "
+                             "supported (replica slots break the equal "
+                             "inner-shard split)")
     idx, icfg = eng.index, eng.icfg
     sizes = np.asarray(idx.n_valid).astype(np.float64)
     bpn = compact_index_mod.compact_bytes_per_node(icfg.dim, icfg.degree)
@@ -153,24 +199,29 @@ def partition_index(eng, n_parts: int, *, mem_budget: int | None = None,
         reclaimable = (sizes - live) * bpn
     else:
         bpc = sizes * bpn
+    if heat is not None:
+        freq = np.asarray(heat, np.float64)
     if freq is None:
         freq = sizes                      # popularity ~ size as prior
-    pl = placement_mod.greedy_place(np.asarray(freq, np.float64), bpc,
-                                    n_parts, mem_budget=mem_budget,
-                                    strict=strict, reclaimable=reclaimable)
+    if placement is not None:
+        pl = placement
+        if pl.n_shards != n_parts:
+            raise ValueError(f"placement has {pl.n_shards} shards for "
+                             f"{n_parts} partitions")
+    else:
+        pl = placement_mod.greedy_place(np.asarray(freq, np.float64), bpc,
+                                        n_parts, mem_budget=mem_budget,
+                                        strict=strict,
+                                        reclaimable=reclaimable)
+        if replicate_hot:
+            pl = placement_mod.replicate_hot(
+                pl, np.asarray(freq, np.float64), bpc,
+                top_h=replicate_hot, copies=replica_factor - 1,
+                mem_budget=mem_budget)
     engines = []
     for o in range(n_parts):
-        members = pl.members(o)
-        sub = compact_index_mod.CompactIndex(
-            codes=idx.codes[members], f_add=idx.f_add[members],
-            neighbors=idx.neighbors[members], entry=idx.entry[members],
-            n_valid=idx.n_valid[members], node_ids=idx.node_ids[members],
-            centroids=idx.centroids[members], alpha=idx.alpha[members],
-            rho=idx.rho[members], shift1=idx.shift1[members],
-            shift2=idx.shift2[members],
-            residual_norm=idx.residual_norm[members],
-            cos_theta=idx.cos_theta[members],
-            rotation=idx.rotation, dim=idx.dim)
+        members = pl.resident(o)
+        sub = _slice_index(idx, members)
         sub_pl = placement_mod.greedy_place(sizes[members], bpc[members],
                                             inner_shards)
         scfg = dataclasses.replace(eng.scfg, mode=modes[o]) \
@@ -904,6 +955,12 @@ class TopologyReport:
     # (C,) per-cluster scatter heat over admitted queries (sharded only):
     # how many admitted probe slots landed on each global cluster — the
     # measurement hook heat-aware placement (ROADMAP item 2) consumes
+    shard_probes: np.ndarray | None = None
+    # (S,) probes ROUTED to each shard over admitted queries (sharded
+    # only). Under replication this differs from folding cluster_hits
+    # through part_of: it counts the owner the router actually chose, so
+    # it is the skew signal RebalancePolicy watches and the denominator
+    # for the benchmark's hottest-shard heat share.
 
 
 class ServingTopology:
@@ -946,7 +1003,8 @@ class ServingTopology:
                  hedge: HedgeConfig | None = None,
                  tenants=None,
                  placement=None, mutable: bool = False,
-                 autoscale=None):
+                 autoscale=None, source=None, mem_budget: int | None = None,
+                 rebalance=None):
         self.groups = [list(g) for g in groups]
         if not self.groups or any(not g for g in self.groups):
             raise ValueError("ServingTopology needs at least one engine in "
@@ -998,12 +1056,16 @@ class ServingTopology:
                     == self.centroids.shape[0]):
                 raise ValueError("part_of/local_cid/centroids disagree on "
                                  "the cluster count")
+            self.replicated = placement is not None \
+                and getattr(placement, "replicated", False)
             counts = np.bincount(self.part_of, minlength=len(self.groups))
             for o, g in enumerate(self.groups):
-                if counts[o] != g[0].index.n_clusters:
+                expect = len(placement.resident(o)) if self.replicated \
+                    else counts[o]
+                if expect != g[0].index.n_clusters:
                     raise ValueError(
                         f"engine {o} holds {g[0].index.n_clusters} clusters "
-                        f"but part_of assigns it {counts[o]}")
+                        f"but part_of assigns it {expect}")
                 reps = {e.scfg.mode for e in g}
                 if len(reps) != 1:
                     raise ValueError(f"replicas within shard {o} disagree "
@@ -1033,6 +1095,7 @@ class ServingTopology:
                                  "(part_of/local_cid/centroids)")
             self.part_of = self.local_cid = self.centroids = None
             self.fanout = 1
+            self.replicated = False
         self.modes = [getattr(g[0].scfg, "mode", "") for g in self.groups]
 
         self._exec = execbackend_mod.resolve_exec_backend(exec)
@@ -1047,6 +1110,12 @@ class ServingTopology:
                                  "partitions along a device axis; a "
                                  "replicated tier has nothing to scatter "
                                  "(use exec='inproc')")
+            if self.replicated:
+                raise ValueError(
+                    "hot-cluster replication routes probes through a "
+                    "host-side multi-owner choice the mesh backend's "
+                    "shard_map scatter step does not lower "
+                    "(use exec='inproc')")
             if any(len(g) != 1 for g in self.groups):
                 raise ValueError(
                     "exec='mesh' drives one device per shard group; "
@@ -1062,6 +1131,11 @@ class ServingTopology:
         # -- day-2 operations: live mutation swaps + replica autoscaling --
         self.placement = placement
         self.mutable = bool(mutable)
+        self.mem_budget = mem_budget
+        # the UNPARTITIONED source arrays apply_placement re-slices; kept
+        # current by apply() so a rebalance after churn sees the live corpus
+        self._src_index = getattr(source, "index", None)
+        self._src_host = getattr(source, "host", None)
         if self.mutable and self.sharded and placement is None:
             raise ValueError(
                 "a mutable SHARDED topology needs the cluster Placement "
@@ -1079,6 +1153,21 @@ class ServingTopology:
                     "launching processes, or use exec='inproc')")
         self.autoscaler = autoscale_mod.Autoscaler(self, autoscale) \
             if autoscale is not None else None
+        if rebalance is not None:
+            if not isinstance(rebalance, autoscale_mod.RebalancePolicy):
+                raise ValueError(
+                    f"rebalance must be a RebalancePolicy, "
+                    f"got {type(rebalance).__name__}")
+            if not self.sharded:
+                raise ValueError("heat-driven rebalancing moves clusters "
+                                 "between shards (needs shards >= 2)")
+            if self.placement is None or self._src_index is None:
+                raise ValueError(
+                    "rebalancing needs the cluster Placement and the "
+                    "unpartitioned source index (placement=/source=...); "
+                    "TopologyConfig.build wires both automatically")
+        self.rebalancer = autoscale_mod.Rebalancer(self, rebalance) \
+            if rebalance is not None else None
         self._active = None        # (root, sink) of the in-progress run
 
     def _resolve_tenants(self, tenants) -> list[TenantSpec] | None:
@@ -1241,26 +1330,70 @@ class ServingTopology:
                     f"mutable tier never changes the cluster count")
             pl = self.placement
             for o, g in enumerate(self.groups):
-                members = pl.members(o)
-                sub = compact_index_mod.CompactIndex(
-                    codes=idx.codes[members], f_add=idx.f_add[members],
-                    neighbors=idx.neighbors[members],
-                    entry=idx.entry[members], n_valid=idx.n_valid[members],
-                    node_ids=idx.node_ids[members],
-                    centroids=idx.centroids[members],
-                    alpha=idx.alpha[members], rho=idx.rho[members],
-                    shift1=idx.shift1[members], shift2=idx.shift2[members],
-                    residual_norm=idx.residual_norm[members],
-                    cos_theta=idx.cos_theta[members],
-                    rotation=idx.rotation, dim=idx.dim)
+                sub = _slice_index(idx, pl.resident(o))
                 leader = g[0]
                 leader.refresh(sub, host)
                 for e in g[1:]:
                     e.index, e.placed, e.host = \
                         leader.index, leader.placed, leader.host
             self.vectors = host.vectors
+            self._src_index, self._src_host = idx, host
             if self._exec.name == "mesh":
                 self._exec.refresh(self)
+
+    def apply_placement(self, pl: placement_mod.Placement) -> None:
+        """Swap a new cluster -> shard assignment into the live topology —
+        the heat-driven rebalance path (``Rebalancer``), sharing the
+        zero-recompile mechanics of ``apply()``.
+
+        The unpartitioned source index (wired by ``TopologyConfig.build``,
+        refreshed by every mutable ``apply()``) is re-sliced per the new
+        placement's resident lists and swapped under each shard's engines
+        via ``engine.refresh``. Swap-based rebalancing (and fixed-capacity
+        replication) keeps every engine's cluster count — shapes stable,
+        so the warmed executables are reused and ``warm()`` afterwards
+        builds 0 new ones. Only the ownership maps move: routing picks up
+        the new ``part_of``/``local_cid``/multi-owner maps at the next
+        ``run()``'s scatter. Between streams only — probe tables are
+        computed once per run against one placement, so a mid-run swap
+        would route in-flight queries with stale local ids."""
+        if not self.sharded:
+            raise ValueError("apply_placement moves clusters between "
+                             "shards; a replicated tier has one group")
+        if self._active is not None:
+            raise ValueError("apply_placement is a between-streams swap — "
+                             "the in-flight run's probe tables were routed "
+                             "against the old placement")
+        if self._src_index is None:
+            raise ValueError(
+                "apply_placement needs the unpartitioned source index "
+                "(ServingTopology(source=...); TopologyConfig.build wires "
+                "it automatically)")
+        if pl.n_shards != len(self.groups):
+            raise ValueError(f"placement has {pl.n_shards} shards for "
+                             f"{len(self.groups)} groups")
+        idx = self._src_index
+        for o, g in enumerate(self.groups):
+            res = pl.resident(o)
+            if len(res) != g[0].index.n_clusters:
+                raise ValueError(
+                    f"shard {o}: new placement holds {len(res)} resident "
+                    f"clusters but the engine was built with "
+                    f"{g[0].index.n_clusters} — rebalance must be "
+                    f"shape-preserving (swaps + fixed replica capacity)")
+        for o, g in enumerate(self.groups):
+            sub = _slice_index(idx, pl.resident(o))
+            leader = g[0]
+            leader.refresh(sub, None)
+            for e in g[1:]:
+                e.index, e.placed, e.host = \
+                    leader.index, leader.placed, leader.host
+        self.placement = pl
+        self.part_of = np.asarray(pl.shard_of, np.int32)
+        self.local_cid = np.asarray(pl.local_slot, np.int32)
+        self.replicated = pl.replicated
+        if self._exec.name == "mesh":
+            self._exec.refresh(self)
 
     # -- scatter routing ------------------------------------------------------
     def _route_probes(self, q: np.ndarray, backend, specs=None,
@@ -1272,9 +1405,15 @@ class ServingTopology:
         prune that tenant's probe rows — cluster_filter sorts probes by
         distance, so a prefix cut IS the lower-nprobe result), (3) backend
         match filter, (4) per-owner scatter split. Returns
-        (tables (O, N, P), touches (N, O), served (N, P)) where ``served``
-        is the global-cluster-id probe table with every masked/dead slot
-        -1 — the per-cluster heat source."""
+        (tables (O, N, P), touches (N, O), served (N, P), owner_sel
+        (N, P)) where ``served`` is the global-cluster-id probe table with
+        every masked/dead slot -1 — the per-cluster heat source — and
+        ``owner_sel`` is the shard each served probe was routed to (-1 in
+        the same holes) — the per-shard heat source. On a replicated
+        placement the split runs through ``choose_owners``: each probe of
+        a replicated cluster goes to ONE owning shard picked to collapse
+        the query's fanout, then break ties toward the least-loaded owner;
+        probe sets stay disjoint so the merge path is untouched."""
         probe, pdist = ivf_mod.cluster_filter(
             jnp.asarray(q), self.centroids, nprobe=self.nprobe)
         if self.adaptive_tau > 0:
@@ -1321,6 +1460,17 @@ class ServingTopology:
                 | match_all[:, None]
         if live is None:
             live = np.ones(probe.shape, bool)
+        if self.replicated:
+            # multi-owner split: pick one owning shard per probe on the
+            # host (fanout-collapsing greedy, least-loaded tie-break) —
+            # probe sets stay disjoint, downstream shapes are identical
+            own, local, _ = ivf_mod.choose_owners(
+                probe, self.placement.owners_of, self.placement.locals_of,
+                n_owners=len(self.groups), live=live)
+            tables, touches = ivf_mod.owner_tables(
+                own, local, len(self.groups))
+            served = np.where(own >= 0, probe, -1)
+            return tables, touches, served, own
         # the jit-lowerable op (one shape per run — no compile churn);
         # equivalence with the numpy split is pinned in test_execbackend
         tables, touches = ivf_mod.owner_split_op(
@@ -1328,7 +1478,10 @@ class ServingTopology:
             jnp.asarray(self.local_cid), jnp.asarray(live),
             n_owners=len(self.groups))
         served = np.where(live, probe, -1)
-        return np.asarray(tables), np.asarray(touches), served
+        owner_sel = np.where(served >= 0,
+                             self.part_of[np.where(served < 0, 0, served)],
+                             -1).astype(np.int32)
+        return np.asarray(tables), np.asarray(touches), served, owner_sel
 
     # -- origin gather/merge --------------------------------------------------
     def _merge(self, sink: ShardedSink, t: float, drain: bool,
@@ -1406,9 +1559,9 @@ class ServingTopology:
         if backend is None and any(s.backend is not None for s in specs):
             backend = [specs[t].backend for t in tenant_of]
         hedge_rt = None
-        served = None
+        served = owner_sel = None
         if self.sharded:
-            tables, touches, served = self._route_probes(
+            tables, touches, served, owner_sel = self._route_probes(
                 q, backend, specs, tenant_of)
             slots = np.cumsum(touches, axis=1) - 1
             pending = touches.sum(axis=1).astype(np.int32)
@@ -1478,7 +1631,7 @@ class ServingTopology:
         return self._report(sink, shed, shed_wait, pending, merge_sizes,
                             makespan, n, run_groups, hedge_rt,
                             specs=specs, tenant_of=tenant_of, adm=adm,
-                            served=served)
+                            served=served, owner_sel=owner_sel)
 
     def _run_loop(self, root, sink, adm, arr, order, n, shed_one,
                   quantum, merge_sizes, ticker):
@@ -1561,7 +1714,8 @@ class ServingTopology:
     def _report(self, sink, shed, shed_wait, pending, merge_sizes,
                 makespan: float, n: int, run_groups: list,
                 hedge_rt: ShardHedge | None = None, *, specs=None,
-                tenant_of=None, adm=None, served=None) -> TopologyReport:
+                tenant_of=None, adm=None, served=None,
+                owner_sel=None) -> TopologyReport:
         n_shed = int(shed.sum())
         n_admitted = n - n_shed
         flush_sizes = [s for grp in run_groups for w in grp
@@ -1584,7 +1738,8 @@ class ServingTopology:
             return self._finish_report(
                 sink, shed, shed_wait, pending, merge_sizes, makespan, n,
                 flush_sizes, per_engine, hedge_rt, specs=specs,
-                tenant_of=tenant_of, adm=adm, served=served)
+                tenant_of=tenant_of, adm=adm, served=served,
+                owner_sel=owner_sel)
         seen_caches: set[int] = set()
         j = 0
         for o, grp_workers in enumerate(run_groups):
@@ -1610,16 +1765,26 @@ class ServingTopology:
                                    merge_sizes, makespan, n, flush_sizes,
                                    per_engine, hedge_rt, specs=specs,
                                    tenant_of=tenant_of, adm=adm,
-                                   served=served)
+                                   served=served, owner_sel=owner_sel)
 
-    def _tenant_stats(self, sink, shed, makespan, specs, tenant_of, adm
-                      ) -> dict:
-        """Per-tenant goodput/latency/shed accounting for the report."""
+    def _tenant_stats(self, sink, shed, makespan, specs, tenant_of, adm,
+                      served=None) -> dict:
+        """Per-tenant goodput/latency/shed accounting for the report.
+        On sharded runs each tenant also gets its own ``cluster_hits``
+        slice of the heat (its admitted rows of the served probe table) —
+        the attribution ``tenant_fair_heat`` reweights so one tenant's
+        hotspot can't starve another's placement."""
         out = {}
         for t, s in enumerate(specs):
             rows = tenant_of == t
             nt = int(rows.sum())
             ns = int(shed[rows].sum())
+            hits_t = None
+            if served is not None:
+                pt = served[rows & ~shed]
+                hits_t = np.bincount(
+                    pt[pt >= 0].ravel(),
+                    minlength=len(self.part_of)).astype(np.int64)
             out[s.name] = {
                 "weight": s.weight,
                 "backend": s.backend,
@@ -1634,24 +1799,31 @@ class ServingTopology:
                 "dealt": adm.dealt[t] if adm is not None else nt - ns,
                 "max_in_service": adm.max_in_service[t]
                 if adm is not None else 0,
+                "cluster_hits": hits_t,
             }
         return out
 
     def _finish_report(self, sink, shed, shed_wait, pending, merge_sizes,
                        makespan, n, flush_sizes, per_engine,
                        hedge_rt, *, specs=None, tenant_of=None, adm=None,
-                       served=None) -> TopologyReport:
+                       served=None, owner_sel=None) -> TopologyReport:
         n_shed = int(shed.sum())
         n_admitted = n - n_shed
         if specs is None:
             specs = [TenantSpec("default")]
             tenant_of = np.zeros(n, np.int32)
         cluster_hits = None
+        shard_probes = None
         if served is not None:
             adm_probes = served[~shed]
             cluster_hits = np.bincount(
                 adm_probes[adm_probes >= 0].ravel(),
                 minlength=len(self.part_of)).astype(np.int64)
+        if owner_sel is not None:
+            adm_owner = owner_sel[~shed]
+            shard_probes = np.bincount(
+                adm_owner[adm_owner >= 0].ravel(),
+                minlength=len(self.groups)).astype(np.int64)
         return TopologyReport(
             ids=sink.out_ids, dists=sink.out_d, latency_s=sink.lat,
             shed=shed, shed_wait_s=shed_wait,
@@ -1679,8 +1851,9 @@ class ServingTopology:
             n_duplicate_drops=hedge_rt.n_duplicate_drops if hedge_rt else 0,
             shard_ewma_ms=hedge_rt.shard_ewma_ms if hedge_rt else [],
             tenants=self._tenant_stats(sink, shed, makespan, specs,
-                                       tenant_of, adm),
-            cluster_hits=cluster_hits)
+                                       tenant_of, adm, served),
+            cluster_hits=cluster_hits,
+            shard_probes=shard_probes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1740,6 +1913,10 @@ class TopologyConfig:
     # -- day-2 operations ----------------------------------------------------
     mutable: bool = False
     autoscale: autoscale_mod.AutoscalePolicy | None = None
+    # -- heat-aware placement ------------------------------------------------
+    replicate_hot: int = 0
+    replica_factor: int = 2
+    rebalance: autoscale_mod.RebalancePolicy | None = None
 
     def __post_init__(self):
         if self.replicas < 1:
@@ -1759,11 +1936,34 @@ class TopologyConfig:
                 self.autoscale, autoscale_mod.AutoscalePolicy):
             raise ValueError(f"autoscale must be an AutoscalePolicy, "
                              f"got {type(self.autoscale).__name__}")
+        if self.replicate_hot < 0:
+            raise ValueError(f"replicate_hot must be >= 0, "
+                             f"got {self.replicate_hot}")
+        if self.replicate_hot and self.shards < 2:
+            raise ValueError("replicate_hot (hot-cluster replication) "
+                             "needs shards >= 2")
+        if self.replicate_hot and not 2 <= self.replica_factor <= self.shards:
+            raise ValueError(f"replica_factor must be in 2..{self.shards}, "
+                             f"got {self.replica_factor}")
+        if self.replicate_hot and self.inner_shards != 1:
+            raise ValueError("replicate_hot with inner_shards > 1 is not "
+                             "supported (replica slots break the equal "
+                             "inner-shard split)")
+        if self.rebalance is not None:
+            if not isinstance(self.rebalance, autoscale_mod.RebalancePolicy):
+                raise ValueError(f"rebalance must be a RebalancePolicy, "
+                                 f"got {type(self.rebalance).__name__}")
+            if self.shards < 2:
+                raise ValueError("heat-driven rebalancing moves clusters "
+                                 "between shards (needs shards >= 2)")
 
-    def build(self, eng, *, freq: np.ndarray | None = None
-              ) -> ServingTopology:
+    def build(self, eng, *, freq: np.ndarray | None = None,
+              heat: np.ndarray | None = None) -> ServingTopology:
         """Materialize this config over one built engine (or the engine of
-        a ``MutableIndex`` via ``mut.to_engine()``)."""
+        a ``MutableIndex`` via ``mut.to_engine()``). ``heat`` threads a
+        measured ``TopologyReport.cluster_hits`` vector into the placer
+        (heat-aware placement + the ``replicate_hot`` hot set); ``freq``
+        keeps its estimated/offline meaning — pass one or the other."""
         serve_kw = dict(
             route=self.route, buckets=self.buckets, costs=self.costs,
             fill_threshold=self.fill_threshold,
@@ -1774,6 +1974,9 @@ class TopologyConfig:
             hedge=self.hedge, tenants=self.tenants,
             mutable=self.mutable, autoscale=self.autoscale)
         if self.shards == 1:
+            if heat is not None:
+                raise ValueError("heat-aware placement needs shards >= 2 "
+                                 "(one shard holds every cluster)")
             return ServingTopology(
                 [replicate_engine(eng, self.replicas,
                                   share_executables=self.share_executables)],
@@ -1781,18 +1984,23 @@ class TopologyConfig:
         parts, pl = partition_index(
             eng, self.shards, mem_budget=self.mem_budget, strict=self.strict,
             modes=self.modes, inner_shards=self.inner_shards, freq=freq,
-            mutable=self.mutable)
+            mutable=self.mutable, heat=heat,
+            replicate_hot=self.replicate_hot,
+            replica_factor=self.replica_factor)
         groups = [replicate_engine(p, self.replicas,
                                    share_executables=self.share_executables)
                   for p in parts]
         return ServingTopology(groups, part_of=pl.shard_of,
                                local_cid=pl.local_slot,
                                centroids=eng.index.centroids,
-                               placement=pl, **serve_kw)
+                               placement=pl, source=eng,
+                               mem_budget=self.mem_budget,
+                               rebalance=self.rebalance, **serve_kw)
 
 
 def topology(eng, *, config: TopologyConfig | None = None,
-             freq: np.ndarray | None = None, **kw) -> ServingTopology:
+             freq: np.ndarray | None = None,
+             heat: np.ndarray | None = None, **kw) -> ServingTopology:
     """Build a serving topology over one built engine.
 
     The typed form — ``topology(eng, config=TopologyConfig(...))`` or
@@ -1801,7 +2009,8 @@ def topology(eng, *, config: TopologyConfig | None = None,
     works as a thin shim that folds the kwargs into a ``TopologyConfig``
     and emits a ``DeprecationWarning``; it accepts exactly the config's
     fields (see ``TopologyConfig`` for the migration recipe). ``freq``
-    (per-cluster access frequency) is data, not policy, and flows to
+    (estimated per-cluster frequency) and ``heat`` (measured
+    ``cluster_hits``) are data, not policy, and flow to
     ``TopologyConfig.build`` either way."""
     if config is not None:
         if kw:
@@ -1811,7 +2020,7 @@ def topology(eng, *, config: TopologyConfig | None = None,
         if not isinstance(config, TopologyConfig):
             raise ValueError(f"config must be a TopologyConfig, "
                              f"got {type(config).__name__}")
-        return config.build(eng, freq=freq)
+        return config.build(eng, freq=freq, heat=heat)
     warnings.warn(
         "topology(eng, shards=..., ...) kwargs are deprecated; build a "
         "TopologyConfig and call topology(eng, config=cfg) or cfg.build(eng)",
@@ -1820,4 +2029,4 @@ def topology(eng, *, config: TopologyConfig | None = None,
         cfg = TopologyConfig(**kw)
     except TypeError as e:
         raise TypeError(f"topology() got unknown keyword(s): {e}") from None
-    return cfg.build(eng, freq=freq)
+    return cfg.build(eng, freq=freq, heat=heat)

@@ -65,6 +65,79 @@ def query_set(seed: int, x: np.ndarray, q: int, noise: float = 0.05
     return (base + rng.normal(0, noise, base.shape)).astype(np.float32)
 
 
+def zipf_query_set(seed: int, x: np.ndarray, assignment: np.ndarray,
+                   n_queries: int, *, s: float = 1.0,
+                   hot_order: np.ndarray | None = None,
+                   n_clusters: int | None = None, noise: float = 0.05
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Zipf-skewed query workload over an ANN corpus.
+
+    Draws each query's TARGET CLUSTER from a Zipf(``s``) law over cluster
+    popularity ranks, then perturbs a random member of that cluster —
+    query probes concentrate on a controllable fraction of clusters, the
+    way real user traffic does, while the per-query search problem stays
+    identical to ``query_set``'s. ``assignment`` maps each corpus row to
+    its cluster (the builder's cluster assignment, e.g.
+    ``np.repeat/argmin`` over centroids). ``hot_order`` permutes WHICH
+    clusters are hot: ``hot_order[r]`` is the cluster holding popularity
+    rank r (default: cluster id == rank). Pass spatially-proximate
+    clusters first to make hotspots geometric (whole probe neighborhoods
+    hot), shuffled ids to scatter them.
+
+    Returns (queries (Q, D) f32, target (Q,) int32 cluster of each draw)
+    — the target vector doubles as the ground-truth heat histogram
+    (``np.bincount(target)``)."""
+    if s <= 0:
+        raise ValueError(f"zipf exponent s must be > 0, got {s}")
+    c = int(n_clusters) if n_clusters is not None \
+        else int(np.asarray(assignment).max()) + 1
+    if hot_order is None:
+        hot_order = np.arange(c)
+    hot_order = np.asarray(hot_order)
+    if len(hot_order) != c or len(np.unique(hot_order)) != c:
+        raise ValueError(f"hot_order must be a permutation of the {c} "
+                         f"cluster ids")
+    rng = np.random.default_rng(seed + 1)
+    p = 1.0 / np.power(np.arange(1, c + 1, dtype=np.float64), s)
+    p /= p.sum()
+    target = hot_order[rng.choice(c, n_queries, p=p)].astype(np.int32)
+    # pick a member row of each target cluster (clusters are never empty
+    # in the builder's assignment; guard anyway by falling back to any row)
+    members = [np.flatnonzero(assignment == cid) for cid in range(c)]
+    rows = np.array([members[cid][rng.integers(len(members[cid]))]
+                     if len(members[cid]) else rng.integers(len(x))
+                     for cid in target])
+    q = x[rows] + rng.normal(0, noise, (n_queries, x.shape[1]))
+    return q.astype(np.float32), target
+
+
+def drifting_hotspot_stream(seed: int, x: np.ndarray,
+                            assignment: np.ndarray, n_queries: int,
+                            n_rounds: int, *, s: float = 1.0,
+                            hot_order: np.ndarray | None = None,
+                            n_clusters: int | None = None,
+                            shift_frac: float = 0.25,
+                            noise: float = 0.05) -> list:
+    """``n_rounds`` Zipf query sets whose hotspot DRIFTS between rounds:
+    each round rotates ``hot_order`` by ``shift_frac`` of the cluster
+    count, so yesterday's hot clusters cool and a fresh region heats up —
+    the regime live heat-driven rebalancing exists for. Returns a list of
+    (queries, target) tuples (one per round, each ``n_queries`` long)."""
+    if not 1 <= n_rounds:
+        raise ValueError(f"need n_rounds >= 1, got {n_rounds}")
+    c = int(n_clusters) if n_clusters is not None \
+        else int(np.asarray(assignment).max()) + 1
+    order = np.arange(c) if hot_order is None else np.asarray(hot_order)
+    shift = max(1, int(round(shift_frac * c)))
+    rounds = []
+    for r in range(n_rounds):
+        rounds.append(zipf_query_set(
+            seed + 1000 * r, x, assignment, n_queries, s=s,
+            hot_order=np.roll(order, -shift * r), n_clusters=c,
+            noise=noise))
+    return rounds
+
+
 def ground_truth(x: np.ndarray, queries: np.ndarray, k: int,
                  chunk: int = 512) -> np.ndarray:
     """Exact top-k ids by brute force (chunked over queries)."""

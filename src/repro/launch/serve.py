@@ -60,6 +60,15 @@ scheduler (``ServingTopology.apply`` on the sharded tier,
 With --fleet > 1 it requires --sharded: the replicated FleetScheduler
 facade carries no mutation path.
 
+--zipf S replaces the encoder-derived retrieval queries with a
+Zipf(S)-skewed workload over the corpus clusters
+(``data/synthetic.zipf_query_set``): query targets concentrate on a few
+hot clusters the way production traffic does (S=1.0 is the classic
+web-traffic law; larger S is hotter), which is the regime heat-aware
+placement + hot-cluster replication (core/placement.py, ISSUE 10) exist
+for. The query encoder is bypassed for the retrieval step — the flag
+shapes WORKLOAD, not model state.
+
 --sharded / --replicas without --fleet >= 2 is an argument ERROR, not a
 silent single-engine run.
 """
@@ -82,7 +91,7 @@ from ..core.fleet import FleetScheduler, TenantSpec, TopologyConfig, \
 from ..core.mutable_index import MutableIndex
 from ..core.pipeline import StreamingScheduler, bucket_ladder
 from ..core.topology import ServingTopology
-from ..data.synthetic import clustered_vectors
+from ..data.synthetic import clustered_vectors, zipf_query_set
 from ..models.model import build_model
 
 
@@ -178,7 +187,8 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
         rag: bool = False, seed: int = 0, verbose: bool = True,
         query_encoder: QueryEncoder | str | None = None, fleet: int = 1,
         sharded: bool = False, replicas: int = 1, exec: str = "inproc",
-        tenants: str | list | None = None, churn: float = 0.0):
+        tenants: str | list | None = None, churn: float = 0.0,
+        zipf: float | None = None):
     # flag-consistency first: these used to be SILENTLY ignored, burning a
     # debugging session on a "sharded" run that never sharded anything
     if sharded and fleet < 2:
@@ -205,6 +215,12 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
     if churn > 0 and not rag:
         raise ValueError("--churn mutates the retrieval corpus and "
                          "needs --rag")
+    if zipf is not None:
+        if not zipf > 0:
+            raise ValueError(f"--zipf exponent must be > 0, got {zipf}")
+        if not rag:
+            raise ValueError("--zipf skews the retrieval stream and "
+                             "needs --rag")
     if churn > 0 and fleet > 1 and not sharded:
         raise ValueError(
             "--churn needs the typed mutable topology (--sharded) or a "
@@ -330,8 +346,18 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
         logits, cache = decode(params, out[-1], cache)
         out.append(jnp.argmax(logits[:, -1:], -1).astype(jnp.int32))
         if eng is not None and i == 0:
-            # retrieval hook: the query encoder embeds the decode state
-            q = query_encoder(logits)
+            if zipf is not None:
+                # Zipf(S)-skewed workload over the corpus clusters: the
+                # traffic shape heat-aware placement exists for (the
+                # query encoder is bypassed — workload knob, not model)
+                cents = np.asarray(eng.index.centroids)
+                assign = np.argmin(
+                    ((x[:, None, :] - cents[None, :, :]) ** 2).sum(-1),
+                    axis=1).astype(np.int32)
+                q, zipf_targets = zipf_query_set(seed, x, assign, B, s=zipf)
+            else:
+                # retrieval hook: the query encoder embeds the decode state
+                q = query_encoder(logits)
             if specs is not None:
                 # round-robin the decode batch across the tenants: every
                 # tenant exercises its own admission queue/backend route
@@ -349,6 +375,13 @@ def run(arch: str, requests: int, prompt_len: int, gen: int,
         if retrieved is not None:
             print(f"[serve] rag: retrieved neighbor ids (first 4 reqs): "
                   f"{retrieved[:4, :4].tolist()}")
+            if zipf is not None:
+                hist = np.bincount(zipf_targets)
+                hot = np.argsort(-hist, kind="stable")[:3]
+                print(f"[serve] rag: zipf(s={zipf:g}) workload — hottest "
+                      f"clusters {hot.tolist()} hold "
+                      f"{hist[hot].sum() / max(hist.sum(), 1):.0%} of "
+                      f"{len(zipf_targets)} queries")
             if fleet > 1 and sharded:
                 shares = [d["queries"] for d in rag_report.per_engine]
                 sizes = [d["clusters"] for d in rag_report.per_engine]
@@ -417,6 +450,11 @@ def main():
                          "weighted-fair (DWRR) by the admission tier; a "
                          "backend entry pins the tenant to matching shards "
                          "(needs --sharded)")
+    ap.add_argument("--zipf", type=float, default=None, metavar="S",
+                    help="with --rag: draw the retrieval queries from a "
+                         "Zipf(S) law over the corpus clusters instead of "
+                         "the query encoder (S=1.0 = classic skew; the "
+                         "workload heat-aware placement is built for)")
     ap.add_argument("--churn", type=float, default=0.0,
                     help="with --rag: delete+insert this fraction of the "
                          "retrieval corpus through the streaming mutation "
@@ -451,6 +489,10 @@ def main():
         if any(t.backend is not None for t in specs) and not args.sharded:
             ap.error("tenant backends pin tenants to shard modes and need "
                      "--sharded")
+    if args.zipf is not None and not args.zipf > 0:
+        ap.error(f"--zipf exponent must be > 0, got {args.zipf}")
+    if args.zipf is not None and not args.rag:
+        ap.error("--zipf skews the retrieval stream and needs --rag")
     if not 0.0 <= args.churn < 1.0:
         ap.error(f"--churn must be in [0, 1), got {args.churn}")
     if args.churn > 0 and not args.rag:
@@ -462,7 +504,7 @@ def main():
     run(args.arch, args.requests, args.prompt_len, args.gen, args.rag,
         query_encoder=args.encoder, fleet=args.fleet, sharded=args.sharded,
         replicas=args.replicas, exec=args.exec, tenants=args.tenants,
-        churn=args.churn)
+        churn=args.churn, zipf=args.zipf)
 
 
 if __name__ == "__main__":

@@ -396,6 +396,60 @@ def test_per_tenant_nprobe_prunes_the_scatter():
     assert rep.tenants["eco"]["n_admitted"] == n // 2
 
 
+def test_per_tenant_cluster_hits_attribution():
+    """Each tenant's report row carries ITS OWN cluster_hits slice: the
+    per-tenant vectors partition the global heat exactly (ISSUE 10 — the
+    attribution heat-aware placement reweights by tenant)."""
+    n = 32
+    q = _indexed_queries(n)
+    labels = ["full", "eco"] * (n // 2)
+    topo, _ = _fake_sharded(2, service_s=1e-3, n_queries=n, buckets=(8,),
+                            fill_threshold=8, wait_limit_s=1e-3,
+                            fifo_depth=4,
+                            tenants=[TenantSpec("full"),
+                                     TenantSpec("eco", nprobe=1)])
+    rep = topo.run(q, tenant=labels)
+    assert rep.n_shed == 0
+    full = rep.tenants["full"]["cluster_hits"]
+    eco = rep.tenants["eco"]["cluster_hits"]
+    assert full.shape == eco.shape == rep.cluster_hits.shape
+    # the per-tenant slices partition the global heat
+    np.testing.assert_array_equal(full + eco, rep.cluster_hits)
+    # eco's pruned scatter shows up in ITS slice, not its neighbor's
+    assert eco.sum() == n // 2
+    assert full.sum() == 2 * (n // 2)
+
+
+def test_tenant_fair_heat_weights_not_volume():
+    """tenant_fair_heat combines per-tenant heat by admission WEIGHT: a
+    noisy tenant hammering one cluster cannot out-vote an equal-weight
+    light tenant, and the result keeps the global hit mass."""
+    from repro.core.autoscale import tenant_fair_heat
+
+    hits = np.array([90.0, 0.0, 10.0, 0.0])
+    rep = type("R", (), {})()
+    rep.cluster_hits = hits
+    rep.tenants = {
+        # noisy: 9x the volume, all on cluster 0
+        "noisy": {"weight": 1.0, "cluster_hits": np.array([90, 0, 0, 0])},
+        # light: little volume, all on cluster 2
+        "light": {"weight": 1.0, "cluster_hits": np.array([0, 0, 10, 0])},
+    }
+    fair = tenant_fair_heat(rep)
+    # equal weights -> equal influence: both hot clusters get half the mass
+    np.testing.assert_allclose(fair, [50.0, 0.0, 50.0, 0.0])
+    assert fair.sum() == hits.sum()
+    # weights shift the split (2:1), volume still doesn't
+    rep.tenants["light"]["weight"] = 2.0
+    fair = tenant_fair_heat(rep)
+    np.testing.assert_allclose(fair, [100.0 / 3, 0.0, 200.0 / 3, 0.0])
+    # a report with no per-tenant heat falls back to the raw global heat
+    rep.tenants = {}
+    np.testing.assert_array_equal(tenant_fair_heat(rep), hits)
+    rep.cluster_hits = None
+    assert tenant_fair_heat(rep) is None
+
+
 # ---------------------------------------------------------------------------
 # real engines: heterogeneous routing parity (the acceptance criterion),
 # per-tenant k, and untenanted-report compatibility
